@@ -1,0 +1,32 @@
+"""Render the final §Roofline table into EXPERIMENTS.md."""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.roofline import render, table  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def main():
+    single = render(table(ART, "single"))
+    multi_rows = table(ART, "multi")
+    ok = sum(1 for r in multi_rows if not r.skipped)
+    sk = sum(1 for r in multi_rows if r.skipped)
+    block = (single + "\n\n"
+             f"multi-pod (2x16x16): {ok} cells compiled + {sk} spec'd "
+             "skips — per-cell artifacts in experiments/artifacts/"
+             "*__multi.json\n")
+    md = open(MD).read()
+    md = re.sub(
+        r"\(table inserted by experiments/render_tables\.py — see below\)",
+        block, md, count=1)
+    open(MD, "w").write(md)
+    print(single)
+
+
+if __name__ == "__main__":
+    main()

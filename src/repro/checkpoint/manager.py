@@ -1,0 +1,152 @@
+"""Mesh-aware checkpointing: atomic directories, async commit, retention.
+
+Layout::
+
+    <dir>/step_000123/          # one directory per step
+        meta.json               # step, arch, mesh shape, tree structure
+        shard_<i>.npz           # per-leaf arrays (host-local shards)
+    <dir>/step_000123.tmp/      # staging; os.replace() commits atomically
+
+Fault-tolerance contract: a checkpoint is visible iff its directory name
+has no ``.tmp`` suffix, so a killed writer never leaves a half checkpoint
+that restore would trust.  ``AsyncCheckpointer`` runs the serialize+rename
+on a worker thread, overlapping I/O with the next training steps (the
+standard large-scale pattern); ``wait()`` joins before the next save or
+exit.  Retention keeps the newest ``keep`` checkpoints plus every
+``keep_period``-th step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(directory: str, step: int, tree, extra: dict | None = None) -> str:
+    """Synchronous atomic save.  Returns the committed path."""
+    flat, _ = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+    meta = {"step": step, "keys": sorted(flat), "time": time.time()}
+    meta.update(extra or {})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def available_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, "meta.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, tree_like, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like`` (abstract ok).
+
+    With ``shardings`` given, leaves are device_put with the target
+    sharding — this is the elastic-remesh path: a checkpoint written on one
+    mesh restores onto any other mesh shape.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    flat, treedef = _flatten(tree_like)
+    leaves = []
+    for key in flat:
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        leaves.append(data[key])
+    restored = jax.tree_util.tree_unflatten(
+        treedef, [jax.numpy.asarray(x) for x in leaves])
+    if shardings is not None:
+        restored = jax.device_put(restored, shardings)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return restored, meta
+
+
+def apply_retention(directory: str, keep: int = 3,
+                    keep_period: int = 0) -> list[int]:
+    """Delete old checkpoints; returns the steps removed."""
+    steps = available_steps(directory)
+    protect = set(steps[-keep:]) if keep else set()
+    if keep_period:
+        protect |= {s for s in steps if s % keep_period == 0}
+    removed = []
+    for s in steps:
+        if s not in protect:
+            shutil.rmtree(os.path.join(directory, f"step_{s:09d}"))
+            removed.append(s)
+    return removed
+
+
+@dataclass
+class AsyncCheckpointer:
+    directory: str
+    keep: int = 3
+    keep_period: int = 0
+    _thread: threading.Thread | None = field(default=None, repr=False)
+    _error: list = field(default_factory=list, repr=False)
+
+    def save(self, step: int, tree, extra: dict | None = None) -> None:
+        self.wait()
+        # materialise on host before handing to the thread (device buffers
+        # must not be donated/mutated mid-write)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, extra)
+                apply_retention(self.directory, self.keep, self.keep_period)
+            except Exception as e:          # surfaced on next wait()
+                self._error.append(e)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error.pop()

@@ -1,0 +1,13 @@
+"""h2o-danube-1.8b — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; hf]
+
+24L d_model=2560 32H (kv=8) d_ff=6912 vocab=32000, window 4096.  The SWA
+ring-buffer KV cache is O(window), so long_500k decode runs.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-1.8b", family="dense",
+    n_layers=24, d_model=2560, n_heads=32, n_kv_heads=8,
+    d_ff=6912, vocab_size=32000, window=4096,
+)

@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig."""
+from __future__ import annotations
+
+from .base import SHAPES, ArchConfig, ShapeConfig
+from .deepseek_7b import CONFIG as deepseek_7b
+from .falcon_mamba_7b import CONFIG as falcon_mamba_7b
+from .h2o_danube_1p8b import CONFIG as h2o_danube_1p8b
+from .llama4_scout_17b_a16e import CONFIG as llama4_scout
+from .moonshot_v1_16b_a3b import CONFIG as moonshot
+from .phi4_mini_3p8b import CONFIG as phi4_mini
+from .pixtral_12b import CONFIG as pixtral_12b
+from .whisper_tiny import CONFIG as whisper_tiny
+from .yi_6b import CONFIG as yi_6b
+from .zamba2_7b import CONFIG as zamba2_7b
+
+ARCHS: dict[str, ArchConfig] = {c.name: c for c in [
+    zamba2_7b, whisper_tiny, deepseek_7b, phi4_mini, yi_6b,
+    h2o_danube_1p8b, pixtral_12b, moonshot, llama4_scout, falcon_mamba_7b,
+]}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def cell_applicable(arch: ArchConfig, shape: ShapeConfig
+                    ) -> tuple[bool, str]:
+    """Is (arch, shape) a runnable cell?  Returns (ok, reason-if-skipped).
+
+    Skips per spec: long_500k needs sub-quadratic attention; encoder-decoder
+    whisper is full-attention (skip long_500k).
+    """
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, ("long_500k skipped: pure full-attention arch "
+                       "(O(L^2) attention / O(L) KV at 524288 tokens)")
+    return True, ""
+
+
+def all_cells(include_skipped: bool = False):
+    """The 40 (arch x shape) cells, with applicability flags."""
+    out = []
+    for a in ARCHS.values():
+        for s in SHAPES.values():
+            ok, reason = cell_applicable(a, s)
+            if ok or include_skipped:
+                out.append((a, s, ok, reason))
+    return out

@@ -1,0 +1,18 @@
+"""whisper-tiny — encoder-decoder audio backbone (conv frontend stubbed).
+[arXiv:2212.04356; unverified]
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.  Encoder-decoder: 4 encoder
++ 4 decoder layers, LayerNorm, GELU MLP, no RoPE (sinusoidal/learned
+positions), tied embeddings.  ``input_specs()`` supplies precomputed frame
+embeddings (B, 1500, d) — the conv stem is a stub per spec.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab_size=51865,
+    n_encoder_layers=4, norm="ln", act="gelu", use_rope=False,
+    qkv_bias=True, tie_embeddings=True,
+    frontend="audio", frontend_seq=1500,
+)

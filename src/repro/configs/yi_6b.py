@@ -1,0 +1,13 @@
+"""yi-6b — llama-arch GQA with kv=4.  [arXiv:2403.04652; hf]
+
+32L d_model=4096 32H (kv=4) d_ff=11008 vocab=64000.  4 kv heads cannot be
+sharded over a 16-way model axis: decode uses the seq-sharded
+(flash-decoding) KV layout.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-6b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+    d_ff=11008, vocab_size=64000, rope_theta=5000000.0,
+)

@@ -1,0 +1,19 @@
+"""zamba2-7b — Mamba-2 backbone + shared attention blocks.
+[arXiv:2411.15242; unverified]
+
+81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000 ssm_state=64.
+Hybrid: SSD (Mamba-2) layers with a SHARED full transformer block applied
+every 6 layers (weights shared across applications).  long_500k runs: SSM
+state is O(1) in sequence; the shared attention uses a 4096-token sliding
+window for long-context decode (documented adaptation, DESIGN.md
+§Arch-applicability).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm_version=2, ssm_state=64, ssm_head_dim=64, ssm_chunk=128,
+    d_inner=7168, attn_period=6, window=4096,
+)

@@ -1,0 +1,31 @@
+"""ppOpen-AT core — the paper's contribution, adapted to Python/JAX.
+
+Public API re-exports.
+"""
+from .cost import According, RooflineTerms, roofline_seconds, roofline_terms
+from .directives import (SelectRegion, dynamic_select, dynamic_unroll,
+                         dynamic_variable, install_define, install_select,
+                         install_unroll, install_variable, region,
+                         static_select, static_unroll, static_variable)
+from .errors import (OATCodegenError, OATError, OATHierarchyError,
+                     OATMissingBasicParamError, OATNestingError,
+                     OATParamCollisionError, OATPriorityError, OATSpecError)
+from .executor import (CostModelExecutor, CountingExecutor, TableExecutor,
+                       WallClockExecutor)
+from .params import (DEFAULT_BASIC_PARAMS, OAT_DEBUG, OAT_ENDTUNESIZE,
+                     OAT_NUMPROCS, OAT_SAMPDIST, OAT_STARTTUNESIZE,
+                     OAT_TUNEDYNAMIC, OAT_TUNESTATIC, ParamDecl, ParamStore,
+                     Varied)
+from .region import ATRegion, Fitting, RegionRegistry, Subregion
+from .runtime import (OAT_ALL, OAT_DYNAMIC, OAT_INSTALL, OAT_STATIC,
+                      ATContext, default_context, reset_default_context)
+from .search import SearchPlan, predicted_count, search_region
+
+__all__ = [
+    "ATContext", "ATRegion", "According", "CostModelExecutor",
+    "CountingExecutor", "Fitting", "OATError", "ParamStore", "RegionRegistry",
+    "SearchPlan", "SelectRegion", "TableExecutor", "Varied",
+    "WallClockExecutor", "OAT_ALL", "OAT_INSTALL", "OAT_STATIC",
+    "OAT_DYNAMIC", "default_context", "predicted_count",
+    "reset_default_context", "roofline_terms", "search_region",
+]

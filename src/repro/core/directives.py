@@ -1,0 +1,172 @@
+"""Pythonic directive frontend — the JAX-side `!OAT$` analogue.
+
+Two ways to annotate code:
+
+1. **Decorator / object API** (this module) — first-class in the JAX
+   framework: regions wrap *variant generators* (callables taking PPs as
+   keyword arguments).
+2. **Literal comment directives** (`#OAT$ ...`, dsl.py) — parsed out of
+   Python source and expanded by codegen.py, mirroring the paper's
+   preprocessor flow exactly.
+
+Example (paper Sample Program 1)::
+
+    ctx = ATContext(workdir)
+    @install_unroll(ctx, name="MyMatMul", varied=Varied(("i", "j"), 1, 16),
+                    fitting=Fitting.least_squares(5, sampled=[1,2,3,4,5,8,16]),
+                    debug=("pp",))
+    def my_matmul(i=1, j=1):
+        return lambda: run_matmul(unroll_i=i, unroll_j=j)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+from .cost import According
+from .params import ParamDecl, Varied
+from .region import ATRegion, Fitting, Subregion
+from .runtime import ATContext, default_context
+
+
+def _coerce_params(params) -> list[ParamDecl]:
+    out = []
+    for p in params or ():
+        if isinstance(p, ParamDecl):
+            out.append(p)
+        elif isinstance(p, (tuple, list)):
+            name, attr = p
+            out.append(ParamDecl(name, attr))
+        else:  # "bp n" / "in CacheSize" / bare name
+            parts = str(p).split()
+            if len(parts) == 2:
+                out.append(ParamDecl(parts[1], parts[0]))
+            else:
+                out.append(ParamDecl(parts[0]))
+    return out
+
+
+def region(ctx: ATContext | None, at_type: str, feature: str, name: str, *,
+           varied: Varied | None = None, fitting: Fitting | None = None,
+           params: Sequence = (), according: According | str | None = None,
+           search: str | None = None, number: int | None = None,
+           prepro: Callable | None = None, postpro: Callable | None = None,
+           debug: tuple = (), parent: ATRegion | None = None,
+           metadata: dict | None = None) -> Callable:
+    """Decorator declaring a tuning region around a variant generator."""
+    ctx = ctx or default_context()
+    if isinstance(according, str):
+        according = According.parse(according)
+
+    def deco(fn: Callable) -> ATRegion:
+        r = ATRegion(at_type=at_type, feature=feature, name=name, fn=fn,
+                     params=_coerce_params(params), varied=varied,
+                     fitting=fitting, according=according, search=search,
+                     number=number, prepro=prepro, postpro=postpro,
+                     debug=tuple(debug), metadata=metadata or {})
+        if parent is not None:
+            parent.add_child(r)
+            ctx.registry.register(r)
+        else:
+            ctx.register(r)
+        return r
+
+    return deco
+
+
+# convenience wrappers, one per (type, feature) pair used in the paper
+def install_unroll(ctx=None, **kw):  # Sample 1
+    return region(ctx, "install", "unroll", kw.pop("name"), **kw)
+
+
+def install_define(ctx=None, **kw):  # Sample 2
+    return region(ctx, "install", "define", kw.pop("name"), **kw)
+
+
+def install_variable(ctx=None, **kw):
+    return region(ctx, "install", "variable", kw.pop("name"), **kw)
+
+
+def static_unroll(ctx=None, **kw):   # Sample 4
+    return region(ctx, "static", "unroll", kw.pop("name"), **kw)
+
+
+def static_variable(ctx=None, **kw):
+    return region(ctx, "static", "variable", kw.pop("name"), **kw)
+
+
+def dynamic_variable(ctx=None, **kw):
+    return region(ctx, "dynamic", "variable", kw.pop("name"), **kw)
+
+
+def dynamic_unroll(ctx=None, **kw):  # Sample 7
+    return region(ctx, "dynamic", "unroll", kw.pop("name"), **kw)
+
+
+class SelectRegion:
+    """Builder for ``select`` regions (Samples 5 and 6)::
+
+        sel = SelectRegion(ctx, "dynamic", name="PrecondSelect",
+                           params=["in eps", "in iter"],
+                           according="min (eps) .and. condition (iter < 5)")
+
+        @sel.alternative()
+        def process_1(...): ...
+
+        @sel.alternative(according="estimated 4.0d0*CacheSize*...")
+        def process_2(...): ...
+
+        sel.finalize()
+    """
+
+    def __init__(self, ctx: ATContext | None, at_type: str, name: str, *,
+                 params: Sequence = (), according: According | str | None = None,
+                 search: str | None = None, number: int | None = None,
+                 parent: ATRegion | None = None, metadata: dict | None = None):
+        self.ctx = ctx or default_context()
+        if isinstance(according, str):
+            according = According.parse(according)
+        self.region = ATRegion(
+            at_type=at_type, feature="select", name=name,
+            params=_coerce_params(params), according=according,
+            search=search, number=number, metadata=metadata or {})
+        self._parent = parent
+        self._registered = False
+
+    def alternative(self, according: According | str | None = None,
+                    name: str = "") -> Callable:
+        if isinstance(according, str):
+            according = According.parse(according)
+
+        def deco(fn: Callable) -> Callable:
+            self.region.subregions.append(
+                Subregion(fn=fn, according=according,
+                          name=name or fn.__name__))
+            return fn
+
+        return deco
+
+    def finalize(self) -> ATRegion:
+        if not self._registered:
+            if self._parent is not None:
+                self._parent.add_child(self.region)
+                self.ctx.registry.register(self.region)
+            else:
+                self.ctx.register(self.region)
+            self._registered = True
+        return self.region
+
+    def __call__(self, *args, **kwargs) -> Any:
+        """Invoke the (possibly still-tuning) region through the runtime."""
+        return self.ctx.execute(self.region.name, *args, **kwargs)
+
+
+def static_select(ctx=None, **kw) -> SelectRegion:
+    return SelectRegion(ctx, "static", kw.pop("name"), **kw)
+
+
+def dynamic_select(ctx=None, **kw) -> SelectRegion:
+    return SelectRegion(ctx, "dynamic", kw.pop("name"), **kw)
+
+
+def install_select(ctx=None, **kw) -> SelectRegion:
+    return SelectRegion(ctx, "install", kw.pop("name"), **kw)

@@ -1,0 +1,13 @@
+from .compression import (compress_roundtrip_error, compressed_psum,
+                          dequantize_int8, quantize_int8)
+from .fault_tolerance import (HeartbeatMonitor, RemeshPlan,
+                              StragglerWatchdog, plan_remesh)
+from .ring_attention import make_ring_attention, ring_collective_bytes
+from .sharding import (batch_shardings, cache_shardings, choose_plan_name,
+                       layer_param_specs, make_plan, param_shardings)
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
+           "compress_roundtrip_error", "HeartbeatMonitor", "RemeshPlan",
+           "StragglerWatchdog", "plan_remesh", "make_plan",
+           "param_shardings", "batch_shardings", "cache_shardings",
+           "choose_plan_name", "layer_param_specs", "make_ring_attention",
+           "ring_collective_bytes"]

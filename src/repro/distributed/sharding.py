@@ -1,0 +1,283 @@
+"""Parameter/activation sharding rules — the layout plans selected by
+before-execute-time AT.
+
+Plans (per arch x shape x mesh; the ``select according estimated`` targets):
+
+* ``tp``     — tensor parallel: attention heads / FFN width / experts /
+               vocab over the ``model`` axis, FSDP over ``data``.
+* ``fsdp``   — fully-sharded only: every weight sharded over both axes'
+               *first* dim where possible, activations replicated over
+               ``model``.  The fallback when head counts do not divide the
+               model axis (phi4 24H, llama4 40H).
+* ``decode_seq`` — decode-time variant of ``tp`` that shards the KV-cache
+               *sequence* over ``model`` (flash-decoding LSE merge happens
+               inside XLA's partitioned softmax) — used when kv_heads do
+               not divide the model axis (yi-6b kv=4) or the cache
+               dominates memory.
+
+The ``pod`` axis (multi-pod mesh) is pure data parallelism: batch sharded,
+params replicated across pods, gradient all-reduce crossing the inter-pod
+links (optionally int8-compressed, distributed/compression.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models.sharding_ctx import LayoutPlan
+
+DATA_AXES_SINGLE = ("data",)
+DATA_AXES_MULTI = ("pod", "data")
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def _divisible(n: int, mesh: Mesh, axis: str = "model") -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def choose_plan_name(cfg: ArchConfig, kind: str, mesh: Mesh) -> str:
+    """Heuristic default; the static-AT driver *searches* over plans and
+    this is only the fallback when no tuning record exists."""
+    m = model_axis_size(mesh)
+    if kind == "decode" and cfg.ssm_version == 0:
+        if not _divisible(cfg.n_kv_heads, mesh):
+            return "decode_seq"
+    if cfg.n_heads % m and cfg.d_ff and cfg.d_ff % m == 0:
+        return "fsdp" if cfg.family in ("dense", "vlm") else "tp"
+    return "tp"
+
+
+def make_plan(cfg: ArchConfig, kind: str, mesh: Mesh,
+              name: str | None = None, *, remat: str = "none",
+              num_microbatches: int = 1) -> LayoutPlan:
+    name = name or choose_plan_name(cfg, kind, mesh)
+    dp = batch_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    m = model_axis_size(mesh)
+    specs: dict[str, P] = {"tokens": P(dpa, None)}
+    if name == "tp":
+        specs["hidden"] = P(dpa, None, None)
+        if cfg.n_heads % m == 0:
+            specs["heads"] = P(dpa, "model", None, None)
+        if cfg.n_kv_heads % m == 0:
+            specs["kv_heads"] = P(dpa, "model", None, None)
+        specs["logits_hidden"] = P(dpa, None)
+        specs["moe_experts"] = P("model", dpa, None, None)
+    elif name == "fsdp":
+        specs["hidden"] = P(dpa, None, None)
+        specs["logits_hidden"] = P(dpa, None)
+        specs["moe_experts"] = P("model", dpa, None, None)
+    elif name == "decode_seq":
+        specs["hidden"] = P(dpa, None, None)
+        specs["logits_hidden"] = P(dpa, None)
+        specs["moe_experts"] = P("model", dpa, None, None)
+    elif name == "decode_resident":
+        # weights live sharded over the model axis only (never re-gathered
+        # per token); batch over data; cache seq over model when kv heads
+        # do not divide
+        specs["hidden"] = P(dpa, None, None)
+        specs["logits_hidden"] = P(dpa, None)
+        specs["moe_experts"] = P("model", dpa, None, None)
+    return LayoutPlan(name=name, specs=specs, remat=remat,
+                      num_microbatches=num_microbatches)
+
+
+# --------------------------------------------------------------------------
+# parameter shardings
+# --------------------------------------------------------------------------
+
+
+def _spec_for_param(path: str, shape: tuple, cfg: ArchConfig, plan: str,
+                    mesh: Mesh) -> P:
+    """PartitionSpec for one parameter, by name-path + shape."""
+    m = model_axis_size(mesh)
+
+    def ok(dim):
+        return dim % m == 0
+
+    stacked = path.startswith("layers/") or path.startswith("enc_layers/") \
+        or path.startswith("dec_layers/")
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+
+    def ps(*axes):
+        return P(*(lead + axes))
+
+    last = path.split("/")[-1]
+    # embeddings / head: vocab over model, d over data
+    if last in ("embed", "lm_head", "pos_embed"):
+        v, d = shape
+        if plan == "decode_resident":
+            return P("model" if ok(v) else None, None)
+        return P("model" if ok(v) else None, "data" if d % _data(mesh) == 0
+                 else None)
+    if plan == "decode_resident":
+        # model-axis-only residency: shard ONE dim over model, never data
+        if len(core) == 3 and "moe" in path:
+            e = core[0]
+            return ps("model" if ok(e) else None, None, None)
+        if len(core) == 2:
+            a, b = core
+            if last in ("wo", "w_down", "out_proj") and ok(a):
+                return ps("model", None)
+            if ok(b):
+                return ps(None, "model")
+            if ok(a):
+                return ps("model", None)
+            return ps(None, None)
+        return ps(*([None] * len(core)))
+    if len(core) == 0:
+        return ps()
+    # MoE experts (E, d, f) / (E, f, d): experts over model, next over data
+    if "moe" in path and last in ("w_gate", "w_up", "w_down") \
+            and len(core) == 3:
+        e, a, b = core
+        return ps("model" if ok(e) else None,
+                  "data" if a % _data(mesh) == 0 else None, None)
+    if len(core) == 1:
+        return ps(None)
+    if len(core) == 2:
+        a, b = core
+        if plan == "fsdp":
+            # shard the larger dim over the flattened (data, model) axes
+            if a % (m * _data(mesh)) == 0:
+                return ps(("data", "model"), None)
+            if b % (m * _data(mesh)) == 0:
+                return ps(None, ("data", "model"))
+            return ps("data" if a % _data(mesh) == 0 else None, None)
+        # tp / decode_seq: column-parallel then row-parallel by name
+        if last in ("wq", "wk", "wv", "w_up", "w_gate", "x_proj", "in_proj",
+                    "dt_proj", "router"):
+            return ps("data" if a % _data(mesh) == 0 else None,
+                      "model" if ok(b) else None)
+        if last in ("wo", "w_down", "out_proj"):
+            return ps("model" if ok(a) else None,
+                      "data" if b % _data(mesh) == 0 else None)
+        return ps("data" if a % _data(mesh) == 0 else None,
+                  "model" if ok(b) else None)
+    # conv weights (K, C) etc.
+    if len(core) >= 2:
+        axes = [None] * len(core)
+        return ps(*axes)
+    return ps()
+
+
+def _data(mesh: Mesh) -> int:
+    return mesh.shape["data"] if "data" in mesh.axis_names else 1
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def param_shardings(abstract_params, cfg: ArchConfig, plan: LayoutPlan,
+                    mesh: Mesh):
+    """NamedSharding pytree matching the params pytree."""
+    flat, treedef = _tree_paths(abstract_params)
+    shardings = []
+    for path, leaf in flat:
+        spec = _spec_for_param(path, leaf.shape, cfg, plan.name, mesh)
+        # validate divisibility; drop axes that do not divide
+        spec = _sanitize(spec, leaf.shape, mesh)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def layer_param_specs(abstract_params, cfg: ArchConfig, plan: LayoutPlan,
+                      mesh: Mesh):
+    """Per-layer (stack axis dropped) NamedShardings for the scan body."""
+    if "layers" not in abstract_params:
+        return None
+    stacked = abstract_params["layers"]
+    flat, treedef = _tree_paths(stacked)
+    out = []
+    for path, leaf in flat:
+        spec = _spec_for_param("layers/" + path, leaf.shape, cfg, plan.name,
+                               mesh)
+        spec = _sanitize(spec, leaf.shape, mesh)
+        out.append(NamedSharding(mesh, P(*spec[1:])))   # drop stack axis
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if i < len(shape) and shape[i] % size == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out[:len(shape)])
+
+
+def cache_shardings(abstract_caches, cfg: ArchConfig, plan: LayoutPlan,
+                    mesh: Mesh):
+    """Shardings for decode caches (stacked (L, B, H, S, D) KV / SSM)."""
+    dp = batch_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    m = model_axis_size(mesh)
+    flat, treedef = _tree_paths(abstract_caches)
+    out = []
+    for path, leaf in flat:
+        shp = leaf.shape
+        if len(shp) == 5:        # (L, B, Hkv, S, D) KV cache
+            if plan.name == "decode_seq":
+                spec = P(None, dpa, None, "model", None)
+            elif plan.name == "decode_resident":
+                spec = P(None, dpa,
+                         "model" if shp[2] % m == 0 else None,
+                         None if shp[2] % m == 0 else "model", None)
+            else:
+                spec = P(None, dpa,
+                         "model" if shp[2] % m == 0 else None, None, None)
+        elif len(shp) == 4:      # (L, B, H, N) / (L, B, d_inner, n) ssm h
+            spec = P(None, dpa, "model" if shp[2] % m == 0 else None, None)
+        elif len(shp) == 3:      # (L, B, conv...) etc.
+            spec = P(None, dpa, None)
+        elif len(shp) == 5 + 1:
+            spec = P(*([None] * len(shp)))
+        else:
+            spec = P(*([None] * len(shp)))
+        out.append(NamedSharding(mesh, _sanitize(spec, shp, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(specs: dict, mesh: Mesh):
+    """Shardings for the input batch dict (tokens/labels/frontend/...)."""
+    dp = batch_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+
+    def one(leaf):
+        spec = P(*((dpa,) + (None,) * (len(leaf.shape) - 1))) \
+            if leaf.shape else P()
+        return NamedSharding(mesh, _sanitize(spec, leaf.shape, mesh))
+
+    return jax.tree.map(one, specs)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel module pairs with a pure-jnp oracle in ref.py; ops.py holds the
+public jit'd wrappers with interpret/TPU dispatch.  Kernel block shapes are
+install-time AT performance parameters (see tuning/install.py).
+"""
+from . import ops, ref
+from .fdm_stress import fdm_stress
+from .flash_attention import flash_attention, flash_decode
+from .matmul import matmul
+from .ssm_scan import selective_scan
+
+__all__ = ["ops", "ref", "matmul", "flash_attention", "flash_decode",
+           "selective_scan", "fdm_stress"]

@@ -1,0 +1,167 @@
+"""Seismic FDM stress-update kernel — the paper's §5.2 Sample 8 hot-spot
+(ppOpen-APPL/FDM), as a Pallas TPU kernel.
+
+Hardware adaptation (recorded in DESIGN.md): the Fortran loop nest walks a
+3-D stencil with (i+1, j+1, k+1) neighbour reads.  On TPU we do not gather —
+the shifted operands (``rig_ip1`` etc.) are materialised as shifted views by
+the wrapper, so every kernel body is a pure elementwise VPU pass over
+blocks.  The paper's loop split then becomes kernel **fission** (two
+``pallas_call``s; the flow-dependent scalar plane ``QG`` is *recomputed* in
+the second kernel — exactly the ``SplitPointCopyDef`` semantics, i.e.
+rematerialisation), and loop fusion becomes the single fused kernel.
+The AT region for this kernel selects:
+
+* ``variant`` — fused (1 pass, larger VMEM set) vs split (2 passes, QG
+  recomputed) — the paper's Sample 8 trade-off;
+* ``bx, by, bz`` — VMEM block shape (the collapse analogue: a (bx*by, bz)
+  tile *is* the collapsed iteration space).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ARGS9 = ("lam", "rig", "qg_abs", "dxvx", "dyvy", "dzvz",
+         "dxvy", "dyvx", "dxvz", "dzvx", "dyvz", "dzvy")
+SHIFTED = ("rig_ip1", "rig_jp1", "rig_kp1", "rig_ip1jp1", "rig_ip1kp1",
+           "rig_jp1kp1")
+STATE = ("sxx", "syy", "szz", "sxy", "sxz", "syz")
+
+
+def _normal_part(refs, dt):
+    rl = refs["lam"][...]
+    rm = refs["rig"][...]
+    rm2 = rm + rm
+    rltheta = (refs["dxvx"][...] + refs["dyvy"][...]
+               + refs["dzvz"][...]) * rl
+    qg = refs["qg_abs"][...]
+    sxx = (refs["sxx"][...] + (rltheta + rm2 * refs["dxvx"][...]) * dt) * qg
+    syy = (refs["syy"][...] + (rltheta + rm2 * refs["dyvy"][...]) * dt) * qg
+    szz = (refs["szz"][...] + (rltheta + rm2 * refs["dzvz"][...]) * dt) * qg
+    return sxx, syy, szz
+
+
+def _shear_part(refs, dt):
+    stmp1 = 1.0 / refs["rig"][...]
+    stmp2 = 1.0 / refs["rig_ip1"][...]
+    stmp4 = 1.0 / refs["rig_kp1"][...]
+    stmp3 = stmp1 + stmp2
+    rmaxy = 4.0 / (stmp3 + 1.0 / refs["rig_jp1"][...]
+                   + 1.0 / refs["rig_ip1jp1"][...])
+    rmaxz = 4.0 / (stmp3 + stmp4 + 1.0 / refs["rig_ip1kp1"][...])
+    rmayz = 4.0 / (stmp3 + stmp4 + 1.0 / refs["rig_jp1kp1"][...])
+    qg = refs["qg_abs"][...]     # recomputed read — SplitPointCopyDef
+    sxy = (refs["sxy"][...]
+           + (rmaxy * (refs["dxvy"][...] + refs["dyvx"][...])) * dt) * qg
+    sxz = (refs["sxz"][...]
+           + (rmaxz * (refs["dxvz"][...] + refs["dzvx"][...])) * dt) * qg
+    syz = (refs["syz"][...]
+           + (rmayz * (refs["dyvz"][...] + refs["dzvy"][...])) * dt) * qg
+    return sxy, sxz, syz
+
+
+def _fused_kernel(*refs_list, names, dt):
+    refs = dict(zip(names, refs_list[:len(names)]))
+    outs = refs_list[len(names):]
+    sxx, syy, szz = _normal_part(refs, dt)
+    sxy, sxz, syz = _shear_part(refs, dt)
+    for o, v in zip(outs, (sxx, syy, szz, sxy, sxz, syz)):
+        o[...] = v
+
+
+def _normal_kernel(*refs_list, names, dt):
+    refs = dict(zip(names, refs_list[:len(names)]))
+    outs = refs_list[len(names):]
+    for o, v in zip(outs, _normal_part(refs, dt)):
+        o[...] = v
+
+
+def _shear_kernel(*refs_list, names, dt):
+    refs = dict(zip(names, refs_list[:len(names)]))
+    outs = refs_list[len(names):]
+    for o, v in zip(outs, _shear_part(refs, dt)):
+        o[...] = v
+
+
+def _prepare(arrays: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    """Build shifted operand views + the QG plane from raw FDM fields."""
+    rig = arrays["rig"]
+    pad = jnp.pad(rig, ((0, 1), (0, 1), (0, 1)), mode="edge")
+    nx, ny, nz = rig.shape
+    out = dict(arrays)
+    out["rig_ip1"] = pad[1:, :-1, :-1]
+    out["rig_jp1"] = pad[:-1, 1:, :-1]
+    out["rig_kp1"] = pad[:-1, :-1, 1:]
+    out["rig_ip1jp1"] = pad[1:, 1:, :-1]
+    out["rig_ip1kp1"] = pad[1:, :-1, 1:]
+    out["rig_jp1kp1"] = pad[:-1, 1:, 1:]
+    out["qg_abs"] = (arrays["absx"][:, None, None]
+                     * arrays["absy"][None, :, None]
+                     * arrays["absz"][None, None, :] * arrays["q"])
+    for k in ("absx", "absy", "absz", "q"):
+        out.pop(k)
+    return out
+
+
+def _call(kernel, names, ins, state_names, state, shape, dt, blocks,
+          interpret):
+    bx, by, bz = blocks
+    nx, ny, nz = shape
+    bx, by, bz = min(bx, nx), min(by, ny), min(bz, nz)
+
+    def padto(a):
+        p = [(0, (-s) % b) for s, b in zip(a.shape, (bx, by, bz))]
+        return jnp.pad(a, p) if any(x for _, x in p) else a
+
+    ins_p = [padto(ins[n]) for n in names]
+    st_p = [padto(state[n]) for n in state_names]
+    px, py, pz = ins_p[0].shape
+    grid = (px // bx, py // by, pz // bz)
+    spec = pl.BlockSpec((bx, by, bz), lambda i, j, k: (i, j, k))
+    n_out = len(state_names)
+    out = pl.pallas_call(
+        functools.partial(kernel, names=list(names) + list(state_names),
+                          dt=dt),
+        grid=grid,
+        in_specs=[spec] * (len(names) + n_out),
+        out_specs=[spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((px, py, pz), st_p[0].dtype)] * n_out,
+        interpret=interpret,
+    )(*ins_p, *st_p)
+    return [o[:nx, :ny, :nz] for o in out]
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "variant", "bx", "by",
+                                             "bz", "interpret"))
+def fdm_stress(arrays: dict[str, jax.Array], state: dict[str, jax.Array],
+               dt: float, *, variant: str = "fused", bx: int = 8,
+               by: int = 8, bz: int = 128,
+               interpret: bool = False) -> dict[str, jax.Array]:
+    """One stress update step.
+
+    ``arrays``: lam, rig, q, absx, absy, absz, dxvx..dzvy (nx, ny, nz) /
+    (n,); ``state``: sxx..syz.  ``variant``: 'fused' | 'split'.
+    """
+    ins = _prepare(arrays)
+    shape = ins["rig"].shape
+    blocks = (bx, by, bz)
+    if variant == "fused":
+        names = ARGS9 + SHIFTED
+        names = tuple(n for n in names if n in ins)
+        outs = _call(_fused_kernel, names, ins, STATE, state, shape, dt,
+                     blocks, interpret)
+        return dict(zip(STATE, outs))
+    if variant == "split":
+        n_names = ("lam", "rig", "qg_abs", "dxvx", "dyvy", "dzvz")
+        o1 = _call(_normal_kernel, n_names, ins, STATE[:3], state, shape,
+                   dt, blocks, interpret)
+        s_names = ("rig", "rig_ip1", "rig_jp1", "rig_kp1", "rig_ip1jp1",
+                   "rig_ip1kp1", "rig_jp1kp1", "qg_abs", "dxvy", "dyvx",
+                   "dxvz", "dzvx", "dyvz", "dzvy")
+        o2 = _call(_shear_kernel, s_names, ins, STATE[3:], state, shape,
+                   dt, blocks, interpret)
+        return dict(zip(STATE, o1 + o2))
+    raise ValueError(f"unknown variant {variant!r}")

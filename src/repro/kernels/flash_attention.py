@@ -1,0 +1,248 @@
+"""Flash attention Pallas kernel (causal / GQA / sliding-window) + decode.
+
+Online-softmax attention with explicit VMEM tiling, IO-aware in the
+FlashAttention sense but re-blocked for the TPU memory hierarchy: the MXU
+consumes (block_q x d_head) x (d_head x block_k) tiles; running max /
+denominator live in VMEM scratch.
+
+Performance parameters (install-time AT): ``block_q``, ``block_k``.
+Layout parameters (before-execute-time AT): which attention path (this
+kernel vs the jnp reference vs ring-SP) is selected per (arch x shape x
+mesh) — see tuning/static.py.
+
+Two kernels:
+
+* :func:`flash_attention` — self-attention over (B, H, S, D) with causal
+  and/or sliding-window masking and GQA head mapping (kv_head = h // G).
+* :func:`flash_decode` — one-token decode against a (B, Hkv, S, D) KV
+  cache, blocked over S (FlashDecoding-style), fp32 LSE merge.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int | None,
+                 block_q: int, block_k: int, n_k: int, k_valid: int):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    padded = k_valid != n_k * block_k
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal or window is not None or padded:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+            kj = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+            mask = jnp.ones((block_q, block_k), jnp.bool_)
+            if causal:
+                mask &= qi >= kj
+            if window is not None:
+                mask &= (qi - kj) < window
+            if padded:
+                mask &= kj < k_valid
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                         # (bq, 1)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    if causal or window is not None:
+        # skip fully-masked tiles (upper triangle / outside the window)
+        live = True
+        if causal:
+            live = q_start + block_q - 1 >= k_start
+        if window is not None:
+            live = jnp.logical_and(
+                live, k_start + block_k - 1 > q_start - window)
+        pl.when(live)(body)
+    else:
+        body()
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "scale", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """Self-attention.  q: (B, H, S, D); k, v: (B, Hkv, S, D), H % Hkv == 0.
+    """
+    b, h, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert s == sk, "flash_attention is self-attention (use flash_decode)"
+    group = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    bq, bk = min(block_q, s), min(block_k, s)
+
+    def pad_seq(a, blk):
+        p = (-a.shape[2]) % blk
+        if p:
+            return jnp.pad(a, ((0, 0), (0, 0), (0, p), (0, 0)))
+        return a
+
+    qp = pad_seq(q, bq)
+    kp, vp = pad_seq(k, bk), pad_seq(v, bk)
+    sq, skk = qp.shape[2], kp.shape[2]
+    grid = (b, h, sq // bq, skk // bk)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, n_k=grid[3], k_valid=s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :s, :]
+
+
+# --------------------------------------------------------------------------
+# decode: one query token against a long KV cache
+# --------------------------------------------------------------------------
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, block_k: int, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    k_start = ik * block_k
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (1, d) -> use (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "scale", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_len: jax.Array | None = None, *, block_k: int = 512,
+                 scale: float | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """Decode attention: q (B, H, 1, D) against caches (B, Hkv, S, D).
+
+    The query's G = H/Hkv grouped heads are folded into the MXU sublane dim
+    so a GQA decode step still feeds (G x d) @ (d x bk) tiles — the TPU
+    adaptation of FlashDecoding's split-K (no warp shuffles here; the lane
+    reduction is the VPU's job).
+    ``kv_len`` (B,) masks the valid prefix of the cache.
+    """
+    b, h, one, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert one == 1
+    g = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    bk = min(block_k, s)
+    p = (-s) % bk
+    if p:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, p), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, p), (0, 0)))
+    sp = k.shape[2]
+    if kv_len is None:
+        kv_len = jnp.full((b,), s, jnp.int32)
+    # fold grouped heads: (B, Hkv, G, D)
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, sp // bk)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=bk,
+                               n_k=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, ik: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, ik: (bb, hh, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, ik: (bb, hh, ik, 0)),
+            pl.BlockSpec((1,), lambda bb, hh, ik: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, hh, ik: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, k, v, kv_len)
+    return out.reshape(b, h, 1, d)
+
+
+def attention_vmem_bytes(block_q: int, block_k: int, d: int,
+                         bytes_per_el: int = 2) -> int:
+    """Analytic VMEM footprint per grid step (CPU-side AT cost model)."""
+    return (block_q * d + 2 * block_k * d) * bytes_per_el \
+        + block_q * block_k * 4 + block_q * (d + 2) * 4

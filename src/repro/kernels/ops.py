@@ -1,0 +1,89 @@
+"""Public jit'd kernel wrappers with interpret/TPU dispatch + AT hookup.
+
+The model stack calls these, never ``pl.pallas_call`` directly.  On CPU
+(this container) kernels run in ``interpret=True`` mode; on TPU they
+compile for real.  Block-shape performance parameters default to
+MXU-aligned values and are overridden by install-time AT results when a
+:class:`~repro.core.runtime.ATContext` has tuned them (see
+tuning/install.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention, flash_decode
+from .matmul import matmul
+from .ssm_scan import selective_scan
+
+_TUNED: dict[str, Any] = {}      # install-time AT writes kernel PPs here
+
+
+def set_tuned(name: str, **pps) -> None:
+    _TUNED.setdefault(name, {}).update(pps)
+
+
+def tuned(name: str) -> dict:
+    return dict(_TUNED.get(name, {}))
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def mm(x, y, bias=None, *, epilogue="none", use_kernel: bool | None = None,
+       **pps):
+    """GEMM entry point.  Falls back to the jnp reference on CPU unless the
+    caller forces the kernel (tests do, with interpret=True)."""
+    if use_kernel is None:
+        use_kernel = not on_cpu()
+    if not use_kernel:
+        return ref.matmul_ref(x, y, bias, epilogue)
+    kw = tuned("matmul")
+    kw.update(pps)
+    return matmul(x, y, bias, epilogue=epilogue, interpret=on_cpu(), **kw)
+
+
+CHUNKED_THRESHOLD = 2048     # above this seq, the jnp path goes flash-style
+
+
+def attention(q, k, v, *, causal=True, window=None,
+              use_kernel: bool | None = None, **pps):
+    if use_kernel is None:
+        use_kernel = not on_cpu()
+    if not use_kernel:
+        if q.shape[2] > CHUNKED_THRESHOLD:
+            kw = tuned("chunked_attention")
+            kw.update(pps)
+            return ref.chunked_attention(q, k, v, causal=causal,
+                                         window=window, **kw)
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    kw = tuned("flash_attention")
+    kw.update(pps)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=on_cpu(), **kw)
+
+
+def decode_attention(q, k, v, kv_len=None, *, use_kernel: bool | None = None,
+                     **pps):
+    if use_kernel is None:
+        use_kernel = not on_cpu()
+    if not use_kernel:
+        return ref.decode_ref(q, k, v, kv_len)
+    kw = tuned("flash_decode")
+    kw.update(pps)
+    return flash_decode(q, k, v, kv_len, interpret=on_cpu(), **kw)
+
+
+def ssm_scan(x, dt, a, b, c, d, *, use_kernel: bool | None = None,
+             return_final_state: bool = False, **pps):
+    if use_kernel is None:
+        use_kernel = not on_cpu()
+    if not use_kernel or return_final_state:
+        return ref.selective_scan_ref(x, dt, a, b, c, d,
+                                      return_final_state)
+    kw = tuned("ssm_scan")
+    kw.update(pps)
+    return selective_scan(x, dt, a, b, c, d, interpret=on_cpu(), **kw)

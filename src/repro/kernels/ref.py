@@ -1,0 +1,186 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, bias: jax.Array | None = None,
+               epilogue: str = "none", out_dtype=None) -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if epilogue == "gelu":
+        out = jax.nn.gelu(out)
+    elif epilogue == "silu":
+        out = jax.nn.silu(out)
+    elif epilogue == "relu":
+        out = jnp.maximum(out, 0)
+    return out.astype(out_dtype or x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None,
+                  kv_len: jax.Array | None = None) -> jax.Array:
+    """GQA attention.  q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode offset)
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    if kv_len is not None:
+        s = jnp.where(kj[None, None, :, :] < kv_len[:, None, None, None],
+                      s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+               kv_len: jax.Array | None = None,
+               scale: float | None = None) -> jax.Array:
+    """One-token decode oracle (q: (B, H, 1, D))."""
+    return attention_ref(q, k, v, causal=False, scale=scale, kv_len=kv_len)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int | None = None,
+                      scale: float | None = None, block_q: int = 1024,
+                      block_k: int = 1024, remat: bool = True) -> jax.Array:
+    """Memory-efficient attention in pure jnp (flash algorithm via nested
+    ``lax.scan`` over q/kv chunks, fp32 online softmax).
+
+    This is the *shardable* long-sequence path: every op is a plain einsum,
+    so GSPMD can partition batch/heads/seq across the mesh — which a
+    ``pallas_call`` cannot do under pjit.  Peak live intermediate is
+    O(bq * bk) per (batch, head) instead of O(S^2); the kv-step is wrapped
+    in ``jax.checkpoint`` so the backward pass recomputes rather than
+    stores per-chunk probabilities.
+    """
+    b, h, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    bq = min(block_q, s)
+    bk = min(block_k, sk)
+    pq, pk = (-s) % bq, (-sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    nq, nk = qp.shape[2] // bq, kp.shape[2] // bk
+    # (nq, B, H, bq, D) / (nk, B, Hkv, bk, D)
+    qs = jnp.moveaxis(qp.reshape(b, h, nq, bq, d), 2, 0)
+    ks = jnp.moveaxis(kp.reshape(b, hkv, nk, bk, d), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(b, hkv, nk, bk, d), 2, 0)
+
+    def kv_step(carry, inp):
+        m_prev, l_prev, acc, qc, iq = carry
+        kc, vc, ik = inp
+        kc = jnp.repeat(kc, g, axis=1) if g > 1 else kc
+        vc = jnp.repeat(vc, g, axis=1) if g > 1 else vc
+        sco = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32),
+                         kc.astype(jnp.float32)) * scale
+        qi = iq * bq + jnp.arange(bq)[:, None]
+        kj = ik * bk + jnp.arange(bk)[None, :]
+        mask = kj < sk                      # padded keys
+        if causal:
+            mask &= qi >= kj
+        if window is not None:
+            mask &= (qi - kj) < window
+        sco = jnp.where(mask[None, None], sco, -1e30)
+        m_cur = jnp.maximum(m_prev, sco.max(-1))
+        p = jnp.exp(sco - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+        return (m_cur, l_cur, acc, qc, iq), None
+
+    if remat:
+        kv_step = jax.checkpoint(kv_step)
+
+    def q_step(_, inp):
+        qc, iq = inp
+        m0 = jnp.full((b, h, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, d), jnp.float32)
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0, qc, iq), (ks, vs, jnp.arange(nk)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, (acc / l[..., None]).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, nq * bq, d)
+    return out[:, :, :s]
+
+
+def selective_scan_ref(x, dt, a, b, c, d, return_final_state=False):
+    """Mamba-1 recurrence via lax.scan.  Shapes as kernels.ssm_scan."""
+    bsz, l, di = x.shape
+    n = a.shape[1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp     # (B,Di) (B,Di) (B,N) (B,N)
+        da = jnp.exp(dtt[..., None] * a[None])           # (B, Di, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = (h * ct[:, None, :]).sum(-1) + d[None] * xt
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    if return_final_state:
+        return y, hf
+    return y
+
+
+def fdm_stress_ref(arrays: dict, state: dict, dt: float) -> dict:
+    """Vectorised Sample-8 stress update with edge-clamped (i+1/j+1/k+1)
+    neighbour reads (the kernel's convention)."""
+    lam, rig, q = arrays["lam"], arrays["rig"], arrays["q"]
+    absx, absy, absz = arrays["absx"], arrays["absy"], arrays["absz"]
+    pad = jnp.pad(rig, ((0, 1), (0, 1), (0, 1)), mode="edge")
+    r_ip1 = pad[1:, :-1, :-1]
+    r_jp1 = pad[:-1, 1:, :-1]
+    r_kp1 = pad[:-1, :-1, 1:]
+    r_ip1jp1 = pad[1:, 1:, :-1]
+    r_ip1kp1 = pad[1:, :-1, 1:]
+    r_jp1kp1 = pad[:-1, 1:, 1:]
+    qg = absx[:, None, None] * absy[None, :, None] * absz[None, None, :] * q
+    rm2 = rig + rig
+    rltheta = (arrays["dxvx"] + arrays["dyvy"] + arrays["dzvz"]) * lam
+    out = {}
+    out["sxx"] = (state["sxx"] + (rltheta + rm2 * arrays["dxvx"]) * dt) * qg
+    out["syy"] = (state["syy"] + (rltheta + rm2 * arrays["dyvy"]) * dt) * qg
+    out["szz"] = (state["szz"] + (rltheta + rm2 * arrays["dzvz"]) * dt) * qg
+    stmp1 = 1.0 / rig
+    stmp2 = 1.0 / r_ip1
+    stmp4 = 1.0 / r_kp1
+    stmp3 = stmp1 + stmp2
+    rmaxy = 4.0 / (stmp3 + 1.0 / r_jp1 + 1.0 / r_ip1jp1)
+    rmaxz = 4.0 / (stmp3 + stmp4 + 1.0 / r_ip1kp1)
+    rmayz = 4.0 / (stmp3 + stmp4 + 1.0 / r_jp1kp1)
+    out["sxy"] = (state["sxy"]
+                  + (rmaxy * (arrays["dxvy"] + arrays["dyvx"])) * dt) * qg
+    out["sxz"] = (state["sxz"]
+                  + (rmaxz * (arrays["dxvz"] + arrays["dzvx"])) * dt) * qg
+    out["syz"] = (state["syz"]
+                  + (rmayz * (arrays["dyvz"] + arrays["dzvy"])) * dt) * qg
+    return out

@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline, train, serve.
+
+NOTE: never import .dryrun from tests — it force-sets the XLA device count.
+"""

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective artifacts.
+
+The two lines above MUST run before any jax import (device count locks on
+first init), which is why this module sets XLA_FLAGS at the very top and
+why nothing here is imported by tests/benches (they must see 1 device).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k [--multi-pod] [--all] [--out experiments/artifacts]
+
+Artifacts (one JSON per cell x mesh) feed EXPERIMENTS.md §Dry-run and the
+roofline analysis (§Roofline).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from ..configs import all_cells, get_arch, get_shape  # noqa: E402
+from ..distributed.sharding import (batch_shardings,  # noqa: E402
+                                    cache_shardings, choose_plan_name,
+                                    layer_param_specs, make_plan,
+                                    param_shardings)
+from ..models import build_model  # noqa: E402
+from ..optim import adamw  # noqa: E402
+from .hlo_analysis import analyze_module, collective_bytes_by_kind  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .steps import step_for_shape  # noqa: E402
+
+
+def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+                plan_name: str | None = None, remat: str = "full",
+                num_microbatches: int | None = None,
+                loss_chunks: int | None = None,
+                verbose: bool = True) -> dict:
+    """Lower + compile one cell; returns the artifact record."""
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    kind = shape.kind
+    if num_microbatches is None:
+        num_microbatches = 8 if kind == "train" else 1
+    plan = make_plan(cfg, kind, mesh, plan_name, remat=remat,
+                     num_microbatches=num_microbatches)
+    if loss_chunks is not None:
+        plan.loss_chunks = loss_chunks
+
+    t0 = time.time()
+    with mesh:
+        abs_params = model.abstract_params()
+        p_shard = param_shardings(abs_params, cfg, plan, mesh)
+        plan.layer_specs = layer_param_specs(abs_params, cfg, plan, mesh)
+        specs = model.input_specs(shape)
+        step = step_for_shape(model, shape, plan, param_shardings=p_shard)
+        if kind == "train":
+            abs_opt = jax.eval_shape(adamw.init, abs_params)
+            o_shard = _opt_shardings(abs_opt, abs_params, p_shard, mesh)
+            b_shard = batch_shardings(specs, mesh)
+            # donate params + optimizer state: the update aliases them
+            jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(abs_params, abs_opt, specs)
+        elif kind == "prefill":
+            b_shard = batch_shardings(specs, mesh)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(abs_params, specs)
+        else:  # decode — donate the caches (updated in place)
+            c_shard = cache_shardings(specs["caches"], cfg, plan, mesh)
+            tok_shard = batch_shardings(
+                {"token": specs["token"], "pos": specs["pos"]}, mesh)
+            jitted = jax.jit(step, in_shardings=(
+                p_shard, c_shard, tok_shard["token"], tok_shard["pos"]),
+                donate_argnums=(1,))
+            lowered = jitted.lower(abs_params, specs["caches"],
+                                   specs["token"], specs["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_by_kind(hlo)
+    loop_aware = analyze_module(hlo)
+    n_chips = mesh.devices.size
+    record = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "axes": list(mesh.axis_names), "chips": n_chips,
+        "plan": plan.name, "remat": plan.remat,
+        "num_microbatches": plan.num_microbatches,
+        "loss_chunks": plan.loss_chunks,
+        "kind": kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        # live bytes: arguments + temps + non-aliased outputs
+        "bytes_per_device": (mem.argument_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             + max(mem.output_size_in_bytes
+                                   - mem.alias_size_in_bytes, 0)),
+        "cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "collective_bytes": coll,
+        # loop-aware (while bodies x trip count): the roofline inputs
+        "hlo_dot_flops": loop_aware["dot_flops"],
+        "hlo_collective_bytes": loop_aware["collective_bytes"],
+        "while_trips": loop_aware["while_trips"][:40],
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch_name} x {shape_name} "
+              f"mesh={record['mesh']} plan={plan.name} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={record['cost_analysis']['flops']:.3e}"
+              f" bytes={record['cost_analysis']['bytes_accessed']:.3e}")
+        print(f"  collective_bytes: { {k: f'{v:.3e}' for k, v in coll.items()} }")
+    return record
+
+
+def _opt_sharding(leaf, p_shard, mesh):
+    return None
+
+
+def _opt_shardings(abs_opt, abs_params, p_shard, mesh):
+    """Optimizer moments share the parameter shardings; step is replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    rep = NamedSharding(mesh, PartitionSpec())
+    return adamw.AdamWState(step=rep, m=p_shard, v=p_shard)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--plan", default=None)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default="experiments/artifacts")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a, s, ok, reason in all_cells(include_skipped=True):
+            cells.append((a.name, s.name, ok, reason))
+    else:
+        cells.append((args.arch, args.shape, True, ""))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape, ok, reason in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if not ok:
+                rec = {"arch": arch, "shape": shape, "skipped": True,
+                       "reason": reason,
+                       "mesh": "2x16x16" if mp else "16x16"}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[dryrun] SKIP {tag}: {reason}")
+                continue
+            if os.path.exists(path):
+                print(f"[dryrun] cached {tag}")
+                continue
+            try:
+                rec = dryrun_cell(arch, shape, multi_pod=mp,
+                                  plan_name=args.plan, remat=args.remat,
+                                  num_microbatches=args.microbatches)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((tag, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\ndry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

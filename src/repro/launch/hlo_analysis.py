@@ -1,0 +1,241 @@
+"""HLO-text analysis: collective bytes, while-loop trip counts.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+optimized HLO: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` occurrence contributes its operand
+bytes.  Ops inside ``while`` bodies are counted once by text parsing — the
+roofline harness therefore multiplies loop-body contributions by the scan
+trip count (extracted from the loop-bound constant) when asked.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+# result type may be a tuple: (f32[...], f32[...]) = all-reduce(...)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in the module text.
+
+    ``-start``/``-done`` async pairs are counted once (the ``-done`` line
+    carries no shape payload in most dumps; we match the op name with
+    optional suffix and dedupe by line).
+    """
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVE_KINDS}
+    seen_done = 0
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done(" in line:
+            seen_done += 1
+            continue        # bytes counted at the -start op
+        out[kind] += _shape_bytes(type_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVE_KINDS)
+    return out
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+# --------------------------------------------------------------------------
+# loop-aware module analysis
+#
+# ``cost_analysis()`` counts a ``while`` body ONCE regardless of trip count
+# (verified empirically: an 8-layer lax.scan reports 1 layer of flops), so
+# scan-over-layers models under-report by ~L.  We therefore walk the
+# optimized HLO per-computation: dot flops and collective bytes are summed
+# per computation, and each ``while`` multiplies its body's totals by the
+# trip count recovered from the loop condition's comparison constant.
+# --------------------------------------------------------------------------
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+"
+                     r"([\w\-]+)\(")
+_WHILE_LINE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:fusion|call)\(.*?\),.*?(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+_SHAPE_ONLY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _dims(type_str: str) -> list[int]:
+    m = _SHAPE_ONLY_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> body lines."""
+    out: dict[str, list[str]] = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if name is None and stripped.endswith("{") and "->" in stripped:
+            m = _COMP_HEAD_RE.match(stripped)
+            if m:
+                name = m.group(1)
+                buf = []
+                continue
+        if name is not None and line.startswith("}"):
+            out[name] = buf
+            name = None
+            continue
+        if name is not None:
+            buf.append(line)
+    return out
+
+
+def _entry_name(hlo_text: str) -> str | None:
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEAD_RE.match(line[len("ENTRY"):].strip())
+            if m:
+                return m.group(1)
+    return None
+
+
+def _symbol_types(body: list[str]) -> dict[str, str]:
+    table: dict[str, str] = {}
+    for line in body:
+        m = _DEF_RE.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+def _dot_flops(line: str, table: dict[str, str]) -> float:
+    m = _DEF_RE.match(line)
+    if not m or m.group(3) != "dot":
+        return 0.0
+    result_dims = _dims(m.group(2))
+    ops_m = _OPERANDS_RE.search(line[m.end(3):])
+    contract = 1
+    if ops_m:
+        lhs = ops_m.group(1).split(",")[0].strip().lstrip("%")
+        lhs_dims = _dims(table.get(lhs, ""))
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if cm and cm.group(1):
+            for i in cm.group(1).split(","):
+                idx = int(i)
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+    n = 1
+    for d in result_dims:
+        n *= d
+    return 2.0 * n * contract
+
+
+def _conv_flops(line: str, table: dict[str, str]) -> float:
+    m = _DEF_RE.match(line)
+    if not m or m.group(3) != "convolution":
+        return 0.0
+    result_dims = _dims(m.group(2))
+    ops_m = _OPERANDS_RE.search(line[m.end(3):])
+    if not ops_m:
+        return 0.0
+    parts = [p.strip().lstrip("%") for p in ops_m.group(1).split(",")]
+    if len(parts) < 2:
+        return 0.0
+    k_dims = _dims(table.get(parts[1], ""))
+    n = 1
+    for d in result_dims:
+        n *= d
+    kernel = 1
+    for d in k_dims[:-1]:     # all but the output-feature dim (approx)
+        kernel *= d
+    return 2.0 * n * kernel
+
+
+def _trip_count(cond_body: list[str]) -> int:
+    """Largest comparison constant in the loop condition (jax scans compare
+    the induction variable against the trip count)."""
+    cs = []
+    for line in cond_body:
+        cs.extend(int(m.group(1)) for m in _CONST_CMP_RE.finditer(line))
+    return max(cs) if cs else 1
+
+
+def analyze_module(hlo_text: str) -> dict:
+    """Loop-aware totals: {'dot_flops', 'collective_bytes': {kind: bytes},
+    'while_trips': [...]} — while bodies multiplied by their trip count."""
+    comps = split_computations(hlo_text)
+    cache: dict[str, tuple[float, dict]] = {}
+
+    def comp_cost(name: str, stack: tuple = ()) -> tuple[float, dict]:
+        if name in cache:
+            return cache[name]
+        if name not in comps or name in stack:
+            return 0.0, {}
+        body = comps[name]
+        table = _symbol_types(body)
+        flops = 0.0
+        coll: dict[str, float] = {}
+        for line in body:
+            flops += _dot_flops(line, table)
+            flops += _conv_flops(line, table)
+            om = _OP_RE.match(line)
+            if om and "-done(" not in line:
+                coll[om.group(2)] = coll.get(om.group(2), 0.0) \
+                    + _shape_bytes(om.group(1))
+            wm = _WHILE_LINE_RE.search(line)
+            if wm:
+                cond, wbody = wm.groups()
+                trips = _trip_count(comps.get(cond, []))
+                f, c = comp_cost(wbody, stack + (name,))
+                flops += trips * f
+                for k, v in c.items():
+                    coll[k] = coll.get(k, 0.0) + trips * v
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                f, c = comp_cost(cm.group(1), stack + (name,))
+                flops += f
+                for k, v in c.items():
+                    coll[k] = coll.get(k, 0.0) + v
+        cache[name] = (flops, coll)
+        return flops, coll
+
+    entry = _entry_name(hlo_text) or next(iter(comps), None)
+    flops, coll = comp_cost(entry) if entry else (0.0, {})
+    coll = dict(coll)
+    coll["total"] = sum(coll.values())
+    trips = []
+    for name, body in comps.items():
+        for line in body:
+            wm = _WHILE_LINE_RE.search(line)
+            if wm:
+                trips.append(_trip_count(comps.get(wm.group(1), [])))
+    return {"dot_flops": flops, "collective_bytes": coll,
+            "while_trips": trips}

@@ -1,0 +1,158 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape x mesh).
+
+    compute    = FLOPs / (chips x 197 TFLOP/s bf16)
+    memory     = HBM bytes / (chips x 819 GB/s)
+    collective = collective bytes / (chips x 50 GB/s/link)
+
+Sources and methodology (documented in EXPERIMENTS.md):
+
+* **FLOPs** — loop-aware HLO dot flops parsed from the compiled dry-run
+  (``hlo_analysis.analyze_module``: while bodies x trip count; verified
+  exact on scanned matmuls).  The analytic first-principles count
+  (analytic.py) is reported alongside; MODEL_FLOPS = 6·N_active·D.
+* **HBM bytes** — the analytic traffic model (flash-aware attention,
+  weight/optimizer/cache traffic).  XLA-*CPU* ``bytes accessed`` models CPU
+  fusion, not TPU HBM, and under-counts loop bodies, so it is shown only
+  as a cross-check column.
+* **collective bytes** — loop-aware parse of every all-gather/all-reduce/
+  reduce-scatter/all-to-all/collective-permute result shape in the
+  compiled HLO.  These are whole-mesh bytes; the per-chip wire time
+  divides by chips (each chip injects its share on its own links).
+
+Reads dry-run artifacts (JSON) and emits the roofline table.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+from ..configs import get_arch, get_shape
+from .analytic import model_flops, step_costs
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    plan: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    analytic_flops: float
+    bytes_per_device: float
+    skipped: bool = False
+    reason: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: MODEL_FLOPS-time / roofline step time."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+
+def from_artifact(record: dict) -> Roofline:
+    """NOTE on units: the compiled SPMD module is the *per-device* program,
+    so the parsed dot-flops and collective bytes are already per-chip
+    (verified: falcon-mamba train_4k parses to 2.27e14 flops/chip ==
+    6·N·D x 4/3 remat recompute / 256 chips).  The analytic model is
+    whole-step, so it divides by chips; for matvec-shaped decode graphs
+    (which XLA-CPU lowers to fused reductions, not dots) the analytic
+    per-chip count is the reliable one and we take the max."""
+    if record.get("skipped"):
+        return Roofline(record["arch"], record["shape"],
+                        record.get("mesh", ""), 0, "", 0, 0, 0, 0, 0, 0, 0,
+                        skipped=True, reason=record.get("reason", ""))
+    cfg = get_arch(record["arch"])
+    shape = get_shape(record["shape"])
+    chips = record["chips"]
+    hlo_flops_dev = record.get("hlo_dot_flops", 0.0)
+    ana = step_costs(cfg, shape)
+    mf = model_flops(cfg, shape)
+    coll_dev = record.get("hlo_collective_bytes", {}).get("total", 0.0)
+    flops_dev = max(hlo_flops_dev, ana.flops / chips)
+    return Roofline(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        chips=chips, plan=record.get("plan", ""),
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=ana.bytes / (chips * HBM_BW),
+        collective_s=coll_dev / ICI_BW,
+        model_flops=mf, hlo_flops=hlo_flops_dev * chips,
+        analytic_flops=ana.flops,
+        bytes_per_device=record.get("bytes_per_device", 0.0),
+    )
+
+
+def table(artifact_dir: str, mesh_filter: str | None = "single"
+          ) -> list[Roofline]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        if mesh_filter and not path.endswith(f"__{mesh_filter}.json"):
+            continue
+        with open(path) as f:
+            rows.append(from_artifact(json.load(f)))
+    return rows
+
+
+def render(rows: list[Roofline]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'plan':<11}"
+           f"{'compute_s':>10}{'memory_s':>10}{'collect_s':>10}"
+           f"{'dominant':>11}{'MF/HLO':>8}{'roofl%':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.skipped:
+            lines.append(f"{r.arch:<24}{r.shape:<13}SKIP: {r.reason[:60]}")
+            continue
+        lines.append(
+            f"{r.arch:<24}{r.shape:<13}{r.plan:<11}"
+            f"{r.compute_s:>10.4f}{r.memory_s:>10.4f}{r.collective_s:>10.4f}"
+            f"{r.dominant:>11}{r.useful_ratio:>8.2f}"
+            f"{100 * r.roofline_fraction:>7.1f}%")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="experiments/artifacts")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = table(args.artifacts, args.mesh)
+    print(render(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.__dict__ | {"dominant": r.dominant,
+                                     "bound_s": r.bound_s,
+                                     "useful_ratio": r.useful_ratio,
+                                     "roofline_fraction":
+                                         r.roofline_fraction}
+                       for r in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

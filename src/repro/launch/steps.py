@@ -1,0 +1,120 @@
+"""Step-function builders: the exact functions the dry-run lowers and the
+trainers/servers execute.
+
+``build_train_step`` composes loss -> grad -> (microbatched accumulation)
+-> AdamW; ``build_prefill_step`` / ``build_decode_step`` are the serving
+entry points.  All are pure functions suitable for ``jax.jit`` with
+explicit in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import Model, use_plan
+from ..models.sharding_ctx import LayoutPlan
+from ..optim import adamw
+
+
+@dataclass(frozen=True)
+class StepBundle:
+    fn: Callable
+    donate: tuple = ()
+
+
+def build_train_step(model: Model, plan: LayoutPlan,
+                     opt_cfg: adamw.AdamWConfig,
+                     param_shardings=None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``param_shardings`` (a NamedSharding pytree) pins the microbatch
+    gradient accumulator to the parameter layout: each microbatch's dW then
+    lowers to a *reduce-scatter* onto the shard instead of a full fp32
+    all-reduce — 1/model_axis of the wire bytes (§Perf hillclimb).
+    """
+    nmb = max(plan.num_microbatches, 1)
+
+    def loss_fn(params, batch):
+        with use_plan(plan):
+            return model.train_loss(params, batch)
+
+    def constrain_grads(g):
+        if param_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), g,
+            param_shardings)
+
+    def train_step(params, opt_state, batch):
+        if nmb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape((nmb, b // nmb) + x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = constrain_grads(g)
+                return (loss_acc + l,
+                        constrain_grads(jax.tree.map(jnp.add, g_acc, g))), \
+                    None
+
+            zeros = constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.float32(0.0), zeros), micro)
+            loss = loss / nmb
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+        new_params, new_opt, metrics = adamw.update(
+            grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_eval_loss(model: Model, plan: LayoutPlan) -> Callable:
+    def eval_loss(params, batch):
+        with use_plan(plan):
+            return model.train_loss(params, batch)
+
+    return eval_loss
+
+
+def build_prefill_step(model: Model, plan: LayoutPlan) -> Callable:
+    def prefill_step(params, batch):
+        with use_plan(plan):
+            return model.prefill(params, batch["tokens"],
+                                 batch.get("frontend_embeds"))
+
+    return prefill_step
+
+
+def build_decode_step(model: Model, plan: LayoutPlan) -> Callable:
+    def decode_step(params, caches, token, pos):
+        with use_plan(plan):
+            return model.decode_step(params, caches, token, pos)
+
+    return decode_step
+
+
+def step_for_shape(model: Model, shape: ShapeConfig, plan: LayoutPlan,
+                   opt_cfg: adamw.AdamWConfig | None = None,
+                   param_shardings=None) -> Callable:
+    if shape.kind == "train":
+        return build_train_step(model, plan,
+                                opt_cfg or adamw.AdamWConfig(),
+                                param_shardings=param_shardings)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, plan)
+    return build_decode_step(model, plan)

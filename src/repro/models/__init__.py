@@ -1,0 +1,7 @@
+"""Model substrate: pure-JAX LM families (dense / MoE / SSM / hybrid /
+encoder-decoder / VLM-backbone) with scan-over-layers assembly."""
+from .model import Model, build_model
+from .sharding_ctx import LayoutPlan, constrain, current_plan, use_plan
+
+__all__ = ["Model", "build_model", "LayoutPlan", "constrain",
+           "current_plan", "use_plan"]

@@ -1,0 +1,156 @@
+"""GQA attention: train/prefill path, decode path with KV cache, cross-attn.
+
+Modes:
+* ``full(params, x, cfg)`` — training / prefill over a whole sequence
+  (flash kernel on TPU, jnp oracle on CPU), causal with optional sliding
+  window; returns attention output and (optionally) the KV cache.
+* ``decode(params, x, cache, pos, cfg)`` — one new token against the cache
+  (flash-decode kernel on TPU).  Sliding-window archs use a ring-buffer
+  cache of O(window) memory, which is what makes ``long_500k`` runnable.
+* ``cross_full`` / ``cross_decode`` — encoder-decoder cross attention
+  (whisper): KV computed once from encoder states.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import apply_rope, dense_init
+from .sharding_ctx import constrain
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    window: int | None = None
+    causal: bool = True
+    use_rope: bool = True
+    qkv_bias: bool = False
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.d_head, dtype),
+        "wk": dense_init(ks[1], cfg.d_model,
+                         cfg.n_kv_heads * cfg.d_head, dtype),
+        "wv": dense_init(ks[2], cfg.d_model,
+                         cfg.n_kv_heads * cfg.d_head, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.d_head, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.d_head,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: AttnConfig, positions):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def full(p: dict, x: jax.Array, cfg: AttnConfig,
+         positions: jax.Array | None = None, return_cache: bool = False):
+    """Whole-sequence attention.  x: (B, S, d)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = constrain(q, "heads")
+    k = constrain(k, "kv_heads")
+    v = constrain(v, "kv_heads")
+    out = ops.attention(q, k, v, causal=cfg.causal, window=cfg.window)
+    out = constrain(out, "heads")
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
+    out = out @ p["wo"]
+    if return_cache:
+        return out, (k, v)
+    return out
+
+
+def decode(p: dict, x: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+           pos: jax.Array, cfg: AttnConfig):
+    """One-token decode.  x: (B, 1, d); caches (B, Hkv, W, Dh); ``pos`` (B,)
+    is the absolute position of the new token.  Returns (out, new_k, new_v).
+
+    With a sliding window the cache is a ring buffer indexed ``pos % W`` —
+    RoPE is applied at absolute positions before caching, so softmax over an
+    unordered window is exact.
+    """
+    b, one, _ = x.shape
+    w = cache_k.shape[2]
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None])
+    slot = pos % w if cfg.window is not None else pos
+    idx = slot[:, None, None, None]
+    bidx = jnp.arange(b)[:, None, None, None]
+    hidx = jnp.arange(cfg.n_kv_heads)[None, :, None, None]
+    didx = jnp.arange(cfg.d_head)[None, None, None, :]
+    cache_k = cache_k.at[bidx, hidx, idx, didx].set(
+        k.transpose(0, 1, 2, 3)[:, :, :1, :].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, hidx, idx, didx].set(
+        v[:, :, :1, :].astype(cache_v.dtype))
+    kv_len = jnp.minimum(pos + 1, w).astype(jnp.int32)
+    out = ops.decode_attention(q, cache_k, cache_v, kv_len)
+    out = out.transpose(0, 2, 1, 3).reshape(b, one, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], cache_k, cache_v
+
+
+def init_cross_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_kv(p: dict, enc: jax.Array, cfg: AttnConfig):
+    """Precompute cross-attention KV from encoder states (B, Se, d)."""
+    b, se, _ = enc.shape
+    k = (enc @ p["wk"]).reshape(b, se, cfg.n_kv_heads,
+                                cfg.d_head).transpose(0, 2, 1, 3)
+    v = (enc @ p["wv"]).reshape(b, se, cfg.n_kv_heads,
+                                cfg.d_head).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def cross_full(p: dict, x: jax.Array, k: jax.Array, v: jax.Array,
+               cfg: AttnConfig):
+    """Cross attention (no RoPE, not causal).  x: (B, Sd, d)."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads,
+                              cfg.d_head).transpose(0, 2, 1, 3)
+    out = ops.attention(q, k, v, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"]
+
+
+def cross_decode(p: dict, x: jax.Array, k: jax.Array, v: jax.Array,
+                 cfg: AttnConfig):
+    b, one, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, one, cfg.n_heads,
+                              cfg.d_head).transpose(0, 2, 1, 3)
+    out = ops.decode_attention(q, k, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, one, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"]
+
+
+def init_cache(batch: int, cfg: AttnConfig, max_len: int,
+               dtype=jnp.bfloat16):
+    """KV cache for one layer; O(window) when sliding-window."""
+    w = min(max_len, cfg.window) if cfg.window is not None else max_len
+    shape = (batch, cfg.n_kv_heads, w, cfg.d_head)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)

@@ -1,0 +1,208 @@
+"""Encoder–decoder model (whisper-tiny backbone).
+
+The audio conv frontend is a STUB per spec: ``input_specs()`` provides
+precomputed frame embeddings (B, S_audio, d); a learned projection stands in
+for the conv stack.  Encoder = bidirectional attention + GELU MLP with
+sinusoidal positions; decoder = causal self-attention + cross-attention +
+MLP with learned positions.  LayerNorm throughout (whisper convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from .layers import (apply_mlp, dense_init, embed_init, init_mlp, layer_norm,
+                     sinusoidal_positions)
+from .sharding_ctx import constrain
+from .transformer import _cast_tree, _compute
+
+
+def _acfg(cfg: ArchConfig, causal: bool) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim, causal=causal, use_rope=False,
+        qkv_bias=cfg.qkv_bias)
+
+
+def _ln_init(d: int, dtype) -> dict:
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(p: dict, x):
+    return layer_norm(x, p["w"], p["b"])
+
+
+def _enc_layer_init(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"ln1": _ln_init(cfg.d_model, dtype),
+            "attn": attn.init_attention(ks[0], _acfg(cfg, False), dtype),
+            "ln2": _ln_init(cfg.d_model, dtype),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=False,
+                            dtype=dtype)}
+
+
+def _dec_layer_init(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"ln1": _ln_init(cfg.d_model, dtype),
+            "self_attn": attn.init_attention(ks[0], _acfg(cfg, True), dtype),
+            "ln_x": _ln_init(cfg.d_model, dtype),
+            "cross_attn": attn.init_cross_attention(ks[1], _acfg(cfg, False),
+                                                    dtype),
+            "ln2": _ln_init(cfg.d_model, dtype),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, gated=False,
+                            dtype=dtype)}
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "frontend_proj": dense_init(ks[2], cfg.d_model, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(
+            lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "enc_ln": _ln_init(cfg.d_model, dtype),
+        "embed": embed_init(ks[3], cfg.padded_vocab, cfg.d_model, dtype),
+        "pos_embed": embed_init(ks[4], 8192, cfg.d_model, dtype),
+        "dec_layers": jax.vmap(
+            lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "dec_ln": _ln_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, Se, d) stub embeddings -> encoder states (B, Se, d)."""
+    x = _compute(frames, cfg) @ _compute(params["frontend_proj"], cfg)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = constrain(x, "hidden")
+    acfg = _acfg(cfg, False)
+
+    def body(x, scanned):
+        lp = scanned
+        x = x + attn.full(lp["attn"], _ln(lp["ln1"], x), acfg)
+        x = x + apply_mlp(lp["mlp"], _ln(lp["ln2"], x), act="gelu")
+        return constrain(x, "hidden"), None
+
+    x, _ = jax.lax.scan(body, x, _cast_tree(params["enc_layers"], cfg))
+    return _ln(_cast_tree(params["enc_ln"], cfg), x)
+
+
+def decode_train(params: dict, tokens: jax.Array, enc: jax.Array,
+                 cfg: ArchConfig) -> jax.Array:
+    """Teacher-forced decoder pass -> hidden (B, Sd, d)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _compute(x, cfg)
+    pos = jnp.arange(tokens.shape[1]) % params["pos_embed"].shape[0]
+    x = x + _compute(jnp.take(params["pos_embed"], pos, axis=0), cfg)
+    x = constrain(x, "hidden")
+    sa, ca = _acfg(cfg, True), _acfg(cfg, False)
+
+    def body(x, scanned):
+        lp = scanned
+        x = x + attn.full(lp["self_attn"], _ln(lp["ln1"], x), sa)
+        k, v = attn.cross_kv(lp["cross_attn"], enc, ca)
+        x = x + attn.cross_full(lp["cross_attn"], _ln(lp["ln_x"], x), k, v,
+                                ca)
+        x = x + apply_mlp(lp["mlp"], _ln(lp["ln2"], x), act="gelu")
+        return constrain(x, "hidden"), None
+
+    x, _ = jax.lax.scan(body, x, _cast_tree(params["dec_layers"], cfg))
+    return _ln(_cast_tree(params["dec_ln"], cfg), x)
+
+
+def train_loss(params: dict, batch: dict, cfg: ArchConfig,
+               n_loss_chunks: int = 8) -> jax.Array:
+    from .layers import chunked_cross_entropy
+    enc = encode(params, batch["frontend_embeds"], cfg)
+    hidden = decode_train(params, batch["tokens"], enc, cfg)
+    b, s, d = hidden.shape
+    w = _compute(params["embed"].T, cfg)        # tied head (whisper)
+    mask = batch.get("loss_mask")
+    mask = mask.reshape(-1).astype(jnp.float32) if mask is not None else None
+    return chunked_cross_entropy(
+        constrain(hidden.reshape(b * s, d), "logits_hidden"), w,
+        batch["labels"].reshape(-1), mask, n_chunks=n_loss_chunks)
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + one-token decode with self-KV + cross-KV caches
+# --------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=None):
+    dtype = jnp.dtype(cfg.cache_dtype) if dtype is None else dtype
+    k, v = attn.init_cache(batch, _acfg(cfg, True), max_len, dtype)
+    l = cfg.n_layers
+    stack = lambda a: jnp.broadcast_to(a, (l,) + a.shape).copy()
+    se = cfg.frontend_seq or 128
+    cross = jnp.zeros((l, batch, cfg.n_kv_heads, se, cfg.head_dim), dtype)
+    return {"kv": (stack(k), stack(v)), "cross_kv": (cross, cross)}
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
+            frontend_embeds: jax.Array | None = None,
+            max_len: int | None = None):
+    max_len = max(max_len or tokens.shape[1], tokens.shape[1])
+    enc = encode(params, frontend_embeds, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _compute(x, cfg)
+    pos = jnp.arange(tokens.shape[1]) % params["pos_embed"].shape[0]
+    x = x + _compute(jnp.take(params["pos_embed"], pos, axis=0), cfg)
+    sa, ca = _acfg(cfg, True), _acfg(cfg, False)
+
+    def body(x, scanned):
+        lp = scanned
+        h, (k, v) = attn.full(lp["self_attn"], _ln(lp["ln1"], x), sa,
+                              return_cache=True)
+        x = x + h
+        ck, cv = attn.cross_kv(lp["cross_attn"], enc, ca)
+        x = x + attn.cross_full(lp["cross_attn"], _ln(lp["ln_x"], x), ck, cv,
+                                ca)
+        x = x + apply_mlp(lp["mlp"], _ln(lp["ln2"], x), act="gelu")
+        cdt = jnp.dtype(cfg.cache_dtype)
+        pad = ((0, 0), (0, 0), (0, max_len - k.shape[2]), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return x, {"kv": (k.astype(cdt), v.astype(cdt)),
+                   "cross_kv": (ck.astype(cdt), cv.astype(cdt))}
+
+    x, caches = jax.lax.scan(body, x,
+                             _cast_tree(params["dec_layers"], cfg))
+    x = _ln(_cast_tree(params["dec_ln"], cfg), x)
+    w = _compute(params["embed"].T, cfg)
+    logits = (x[:, -1] @ w).astype(jnp.float32)
+    return logits, dict(caches)
+
+
+def decode_step(params: dict, caches: dict, token: jax.Array,
+                pos: jax.Array, cfg: ArchConfig):
+    x = jnp.take(params["embed"], token, axis=0)
+    x = _compute(x, cfg)
+    pe = params["pos_embed"]
+    x = x + _compute(jnp.take(pe, pos[:, None] % pe.shape[0], axis=0), cfg)
+    sa, ca = _acfg(cfg, True), _acfg(cfg, False)
+
+    def body(carry, scanned):
+        x, = carry
+        lp = scanned["params"]
+        ck, cv = scanned["kv"]
+        h, ck, cv = attn.decode(lp["self_attn"], _ln(lp["ln1"], x), ck, cv,
+                                pos, sa)
+        x = x + h
+        xk, xv = scanned["cross_kv"]
+        x = x + attn.cross_decode(lp["cross_attn"], _ln(lp["ln_x"], x),
+                                  xk, xv, ca)
+        x = x + apply_mlp(lp["mlp"], _ln(lp["ln2"], x), act="gelu")
+        return (x,), {"kv": (ck, cv), "cross_kv": (xk, xv)}
+
+    (x,), new_caches = jax.lax.scan(
+        body, (x,), {"params": _cast_tree(params["dec_layers"], cfg),
+                     "kv": caches["kv"],
+                     "cross_kv": caches["cross_kv"]})
+    x = _ln(_cast_tree(params["dec_ln"], cfg), x)
+    w = _compute(params["embed"].T, cfg)
+    logits = (x[:, 0] @ w).astype(jnp.float32)
+    return logits, dict(new_caches)

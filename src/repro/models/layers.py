@@ -1,0 +1,165 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings, chunked CE loss.
+
+Pure-JAX (no flax): parameters are nested dicts of arrays; every layer is a
+pair of ``init_*(key, ...) -> params`` and a pure apply function.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(in_dim)
+    return jax.random.uniform(key, (in_dim, out_dim), dtype, -scale, scale)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+            ).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2,
+                                       dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, H, S, D) with positions (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if angles.ndim == 2:          # (S, D/2) -> (1, 1, S, D/2)
+        angles = angles[None, None]
+    else:                         # (B, S, D/2) -> (B, 1, S, D/2)
+        angles = angles[:, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embedding (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angles = pos / (10000.0 ** (2 * idx / dim))
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        gate = x @ p["w_gate"]
+        h = jax.nn.silu(gate) * up if act == "silu" else jax.nn.gelu(gate) * up
+    else:
+        h = jax.nn.gelu(up) if act == "gelu" else jax.nn.silu(up)
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# chunked (vocab-safe) cross-entropy
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_chunks", "z_weight"))
+def chunked_cross_entropy(hidden: jax.Array, w_vocab: jax.Array,
+                          labels: jax.Array, mask: jax.Array | None = None,
+                          n_chunks: int = 8, z_weight: float = 0.0
+                          ) -> jax.Array:
+    """Mean CE of ``hidden @ w_vocab`` vs labels, scanning over token chunks
+    so the full (tokens, vocab) logits tensor is never resident — the
+    1000+-node posture for 200k vocabularies.  hidden: (T, d); labels: (T,).
+    """
+    t, d = hidden.shape
+    pad = (-t) % n_chunks
+    if pad:
+        hidden = jnp.pad(hidden, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+        mask = jnp.pad(mask, (0, pad)) if mask is not None else \
+            jnp.pad(jnp.ones((t,), jnp.float32), (0, pad))
+    elif mask is None:
+        mask = jnp.ones((t,), jnp.float32)
+    tc = hidden.shape[0] // n_chunks
+    hs = hidden.reshape(n_chunks, tc, d)
+    ls = labels.reshape(n_chunks, tc)
+    ms = mask.reshape(n_chunks, tc)
+
+    def chunk_loss(carry, inp):
+        h, lbl, m = inp
+        logits = (h @ w_vocab).astype(jnp.float32)          # (tc, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lbl[:, None], axis=-1)[:, 0]
+        nll = (lse - gold) * m
+        z = (lse ** 2) * m * z_weight
+        return carry + nll.sum() + z.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (hs, ls, ms))
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None
+                  ) -> jax.Array:
+    """Depthwise causal conv over seq.  x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],                    # (K, 1, C) kernel
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1])
+    if b is not None:
+        out = out + b
+    return out

@@ -1,0 +1,106 @@
+"""Model facade: one object per architecture, dispatching to the decoder
+family (transformer.py) or encoder-decoder (encdec.py) implementations.
+
+Every entry point is a pure function of (params, inputs); ``input_specs``
+returns ShapeDtypeStruct stand-ins for the dry-run (weak-type-correct,
+shardable, no allocation) and ``abstract_params`` runs init under
+``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import encdec, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- init ------------------------------------------------------------
+    def init(self, key) -> dict:
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    def abstract_params(self):
+        return jax.eval_shape(
+            lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- steps -----------------------------------------------------------
+    def train_loss(self, params, batch):
+        if self.cfg.is_encoder_decoder:
+            return encdec.train_loss(params, batch, self.cfg)
+        return transformer.train_loss(params, batch, self.cfg)
+
+    def forward(self, params, tokens, frontend_embeds=None):
+        return transformer.forward(params, tokens, self.cfg,
+                                   frontend_embeds)
+
+    def prefill(self, params, tokens, frontend_embeds=None,
+                max_len=None):
+        if self.cfg.is_encoder_decoder:
+            return encdec.prefill(params, tokens, self.cfg, frontend_embeds,
+                                  max_len)
+        return transformer.prefill(params, tokens, self.cfg,
+                                   frontend_embeds, max_len)
+
+    def decode_step(self, params, caches, token, pos):
+        if self.cfg.is_encoder_decoder:
+            return encdec.decode_step(params, caches, token, pos, self.cfg)
+        return transformer.decode_step(params, caches, token, pos, self.cfg)
+
+    def init_caches(self, batch: int, max_len: int, dtype=None):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_caches(self.cfg, batch, max_len, dtype)
+        return transformer.init_caches(self.cfg, batch, max_len, dtype)
+
+    def abstract_caches(self, batch: int, max_len: int):
+        return jax.eval_shape(
+            functools.partial(self.init_caches, batch, max_len))
+
+    # -- dry-run input stand-ins ------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct inputs for the given shape's step function."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f32 = jnp.float32
+
+        def sds(shp, dt):
+            return jax.ShapeDtypeStruct(shp, dt)
+
+        fe_seq = cfg.frontend_seq if cfg.frontend != "none" else 0
+        if shape.kind == "train":
+            specs = {"tokens": sds((b, s - fe_seq), i32),
+                     "labels": sds((b, s - fe_seq), i32)}
+            if cfg.is_encoder_decoder:
+                specs = {"tokens": sds((b, s), i32),
+                         "labels": sds((b, s), i32),
+                         "frontend_embeds": sds((b, fe_seq or s // 2,
+                                                 cfg.d_model), f32)}
+            elif fe_seq:
+                specs["frontend_embeds"] = sds((b, fe_seq, cfg.d_model), f32)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": sds((b, s - fe_seq), i32)}
+            if cfg.is_encoder_decoder:
+                specs = {"tokens": sds((b, s), i32),
+                         "frontend_embeds": sds((b, fe_seq or s // 2,
+                                                 cfg.d_model), f32)}
+            elif fe_seq:
+                specs["frontend_embeds"] = sds((b, fe_seq, cfg.d_model), f32)
+            return specs
+        # decode: one new token with a KV cache of seq_len
+        return {"caches": self.abstract_caches(b, s),
+                "token": sds((b, 1), i32),
+                "pos": sds((b,), i32)}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

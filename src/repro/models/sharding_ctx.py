@@ -1,0 +1,78 @@
+"""Activation-sharding context — the model's only coupling to the mesh.
+
+The launcher installs a :class:`LayoutPlan` (chosen by before-execute-time
+AT per arch x shape x mesh); model code calls ``constrain(x, role)`` at
+block boundaries.  With no plan installed (CPU tests) it is a no-op, so
+model code never imports mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass
+class LayoutPlan:
+    """Named activation PartitionSpecs (the static-AT-selected layout).
+
+    Roles: ``tokens`` (B, S), ``hidden`` (B, S, d), ``heads`` (B, H, S, Dh),
+    ``kv_cache`` (L, B, Hkv, S, Dh), ``logits_hidden`` (T, d),
+    ``moe_experts`` (E, G, C, d), ``ssm_inner`` (B, L, d_inner).
+    """
+
+    name: str = "replicated"
+    specs: dict[str, P] = field(default_factory=dict)
+    # per-layer parameter PartitionSpecs (stack axis dropped); applied
+    # INSIDE the layer scan so dW reductions lower to reduce-scatter onto
+    # the shard (GSPMD does not propagate through scan bodies)
+    layer_specs: object = None
+    # PP knobs carried with the plan (static AT results)
+    remat: str = "none"            # none | dots | full
+    num_microbatches: int = 1
+    loss_chunks: int = 8           # CE vocab-chunk count (PP: wire bytes
+    #                                of the head-grad psum scale with it)
+    grad_compress: bool = False    # int8 pod-axis gradient all-reduce
+
+    def spec(self, role: str) -> P | None:
+        return self.specs.get(role)
+
+
+_ACTIVE: list[LayoutPlan | None] = [None]
+
+
+def current_plan() -> LayoutPlan | None:
+    return _ACTIVE[-1]
+
+
+@contextlib.contextmanager
+def use_plan(plan: LayoutPlan | None):
+    _ACTIVE.append(plan)
+    try:
+        yield plan
+    finally:
+        _ACTIVE.pop()
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    plan = current_plan()
+    if plan is None:
+        return x
+    spec = plan.spec(role)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_layer_params(lp):
+    """Pin one layer's weight slices (and therefore their cotangents) to
+    the plan's layout, inside the scan body."""
+    plan = current_plan()
+    if plan is None or plan.layer_specs is None:
+        return lp
+    return jax.tree.map(
+        lambda x, s: x if s is None
+        else jax.lax.with_sharding_constraint(x, s), lp, plan.layer_specs,
+        is_leaf=lambda n: n is None)

@@ -1,0 +1,274 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 / SSD (zamba2).
+
+Train/prefill paths use the chunked formulations (the Pallas selective-scan
+kernel for Mamba-1 on TPU; a dense chunked SSD in jnp whose intra-chunk
+matmuls are MXU-shaped).  Decode is the O(1)-per-token recurrence — the
+reason ``long_500k`` runs for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import causal_conv1d, dense_init, rms_norm
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# --------------------------------------------------------------------------
+
+
+class Mamba1Config(NamedTuple):
+    d_model: int
+    d_inner: int           # 2 * d_model
+    d_state: int           # 16
+    d_conv: int = 4
+    dt_rank: int = 0       # d_model // 16 default
+
+
+def m1_dt_rank(cfg: Mamba1Config) -> int:
+    return cfg.dt_rank or max(cfg.d_model // 16, 1)
+
+
+def init_mamba1(key, cfg: Mamba1Config, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    di, n, r = cfg.d_inner, cfg.d_state, m1_dt_rank(cfg)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * di, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], r, di, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, cfg.d_model, dtype),
+    }
+
+
+def apply_mamba1(p: dict, x: jax.Array, cfg: Mamba1Config,
+                 return_state: bool = False):
+    """x: (B, L, d) -> (B, L, d) [, final decode state]."""
+    di, n, r = cfg.d_inner, cfg.d_state, m1_dt_rank(cfg)
+    xz = x @ p["in_proj"]
+    xin_raw, z = jnp.split(xz, 2, axis=-1)
+    xin = jax.nn.silu(causal_conv1d(xin_raw, p["conv_w"], p["conv_b"]))
+    dbc = xin @ p["x_proj"]
+    dt, bmat, cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if return_state:
+        y, hf = ops.ssm_scan(xin, dt, a, bmat, cmat, p["d_skip"],
+                             return_final_state=True)
+        state = {"conv": _conv_tail(xin_raw, cfg.d_conv), "h": hf}
+    else:
+        y = ops.ssm_scan(xin, dt, a, bmat, cmat, p["d_skip"])
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, state
+    return out
+
+
+def _conv_tail(raw: jax.Array, d_conv: int) -> jax.Array:
+    """Last d_conv-1 pre-conv inputs (front-padded), the decode conv
+    state."""
+    b, l, c = raw.shape
+    k = d_conv - 1
+    if l >= k:
+        return raw[:, l - k:]
+    return jnp.concatenate(
+        [jnp.zeros((b, k - l, c), raw.dtype), raw], axis=1)
+
+
+def init_mamba1_state(batch: int, cfg: Mamba1Config, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def step_mamba1(p: dict, x: jax.Array, state: dict, cfg: Mamba1Config):
+    """One decode step.  x: (B, 1, d) -> (y (B, 1, d), new state)."""
+    di, n, r = cfg.d_inner, cfg.d_state, m1_dt_rank(cfg)
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                 # (B, di)
+    conv_buf = jnp.concatenate([state["conv"], xin[:, None]], axis=1)
+    w = p["conv_w"]                                    # (K, di)
+    xc = jax.nn.silu((conv_buf * w[None]).sum(axis=1) + p["conv_b"])
+    dbc = xc @ p["x_proj"]
+    dt, bmat, cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (B, di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (di, n)
+    da = jnp.exp(dt[..., None].astype(jnp.float32) * a[None])  # (B, di, n)
+    h = da * state["h"] + (dt * xc).astype(jnp.float32)[..., None] \
+        * bmat.astype(jnp.float32)[:, None, :]
+    y = (h * cmat.astype(jnp.float32)[:, None, :]).sum(-1) \
+        + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y[:, None], {"conv": conv_buf[:, 1:], "h": h}
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2-7b)
+# --------------------------------------------------------------------------
+
+
+class Mamba2Config(NamedTuple):
+    d_model: int
+    d_inner: int          # n_heads * head_dim
+    d_state: int          # 64
+    n_heads: int
+    head_dim: int
+    d_conv: int = 4
+    chunk: int = 64
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              2 * di + 2 * n + h, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, conv_dim),
+                                    dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)
+                         ).astype(dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, cfg.d_model, dtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{j < t <= i} a_t for i >= j else -inf.  a: (..., Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., Q, Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_head, b, c, d_skip, chunk: int,
+                return_final_state: bool = False):
+    """SSD (Mamba-2) chunked algorithm.
+
+    x: (B, L, H, P); dt: (B, L, H) (positive); a_head: (H,) negative;
+    b, c: (B, L, N); d_skip: (H,) -> y (B, L, H, P).
+    """
+    bs, l, h, pdim = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+    xc = x.reshape(bs, nc, q, h, pdim)
+    dtc = dt.reshape(bs, nc, q, h).astype(jnp.float32)
+    bc = b.reshape(bs, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bs, nc, q, n).astype(jnp.float32)
+    a = dtc * a_head[None, None, None, :]               # (B, nc, Q, H)
+
+    # intra-chunk (dense, MXU-shaped)
+    lmat = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))    # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)      # (B, nc, Q, Q)
+    w = scores[:, :, None] * lmat                       # (B, nc, H, Q, Q)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]       # (B, nc, Q, H, P)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w, xdt)
+
+    # chunk states + inter-chunk recurrence
+    a_cum = jnp.cumsum(a, axis=2)                       # (B, nc, Q, H)
+    a_tot = a_cum[:, :, -1]                             # (B, nc, H)
+    decay_out = jnp.exp(a_tot[:, :, None] - a_cum)      # (B, nc, Q, H)
+    s_c = jnp.einsum("bcjn,bcjhp,bcjh->bchnp", bc, xdt, decay_out)
+
+    def scan_fn(hprev, inp):
+        s, atot = inp
+        hnew = jnp.exp(atot)[..., None, None] * hprev + s
+        return hnew, hprev
+
+    h0 = jnp.zeros((bs, h, n, pdim), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        scan_fn, h0, (s_c.transpose(1, 0, 2, 3, 4),
+                      a_tot.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                # (B, nc, H, N, P)
+
+    decay_in = jnp.exp(a_cum)                           # (B, nc, Q, H)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", cc, h_in, decay_in)
+    y = y_intra + y_inter + xc.astype(jnp.float32) * d_skip[None, None,
+                                                            None, :, None]
+    y = y.reshape(bs, nc * q, h, pdim)[:, :l]
+    if return_final_state:
+        # note: with a padded tail the padded steps have dt=0 -> a=0,
+        # exp(0)=1 and zero input, so h_final is exact
+        return y.astype(x.dtype), h_final
+    return y.astype(x.dtype)
+
+
+def apply_mamba2(p: dict, x: jax.Array, cfg: Mamba2Config,
+                 return_state: bool = False):
+    """x: (B, L, d) -> (B, L, d) [, final decode state]."""
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"]))
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])              # (B, L, H)
+    a_head = -jnp.exp(p["a_log"].astype(jnp.float32))    # (H,)
+    bsz, l, _ = x.shape
+    out = ssd_chunked(xin.reshape(bsz, l, h, pd), dt, a_head, bmat, cmat,
+                      p["d_skip"], cfg.chunk,
+                      return_final_state=return_state)
+    if return_state:
+        y, hf = out
+        # ssd state layout (B, H, N, P) -> decode layout (B, H, N, P)
+        state = {"conv": _conv_tail(xbc_raw, cfg.d_conv), "h": hf}
+    else:
+        y = out
+    y = y.reshape(bsz, l, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out_p = y @ p["out_proj"]
+    if return_state:
+        return out_p, state
+    return out_p
+
+
+def init_mamba2_state(batch: int, cfg: Mamba2Config, dtype=jnp.float32):
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                       jnp.float32),
+    }
+
+
+def step_mamba2(p: dict, x: jax.Array, state: dict, cfg: Mamba2Config):
+    """One decode step.  x: (B, 1, d)."""
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    proj = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    conv_buf = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    xbc = jax.nn.silu((conv_buf * p["conv_w"][None]).sum(axis=1)
+                      + p["conv_b"])
+    xin, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)  # (B, H)
+    a_head = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a_head[None])                      # (B, H)
+    xh = xin.reshape(-1, h, pd).astype(jnp.float32)
+    hst = da[..., None, None] * state["h"] + jnp.einsum(
+        "bn,bhp,bh->bhnp", bmat.astype(jnp.float32), xh, dt)
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), hst) \
+        + p["d_skip"][None, :, None] * xh
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return (y @ p["out_proj"])[:, None], {"conv": conv_buf[:, 1:], "h": hst}

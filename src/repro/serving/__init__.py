@@ -1,0 +1,2 @@
+from .engine import LaneState, Request, ServingEngine, length_bucket
+__all__ = ["ServingEngine", "Request", "LaneState", "length_bucket"]

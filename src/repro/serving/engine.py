@@ -1,0 +1,161 @@
+"""Serving engine: continuous batching over fixed decode lanes.
+
+The production pattern: a fixed-shape decode step (jit-compiled once) over
+``n_lanes`` sequences; prefill fills a free lane, finished lanes are
+recycled mid-flight (continuous batching).  Run-time auto-tuning hooks in
+at two points (tuning/dynamic.py):
+
+* decode-kernel variant per *sequence-length bucket* — a ``dynamic select``
+  AT region chooses e.g. flash-decode block size / layout per bucket, the
+  paper's Sample 6/7 pattern applied to serving;
+* prefill chunking for long prompts.
+
+Caches are stacked (L, lanes, ...); per-lane writes use
+``jax.tree.map`` + indexed updates so lane recycling never re-compiles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    out_tokens: list[int] = field(default_factory=list)
+    done: bool = False
+    submit_t: float = field(default_factory=time.time)
+    first_token_t: float | None = None
+    finish_t: float | None = None
+
+
+@dataclass
+class LaneState:
+    rid: int | None = None
+    pos: int = 0
+    remaining: int = 0
+
+
+def length_bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, n_lanes: int = 4,
+                 max_len: int = 512, eos_id: int | None = None,
+                 decode_fn: Callable | None = None,
+                 prefill_fn: Callable | None = None,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.n_lanes = n_lanes
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.lanes = [LaneState() for _ in range(n_lanes)]
+        self.caches = model.init_caches(n_lanes, max_len)
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self._decode = decode_fn or jax.jit(model.decode_step)
+        self._prefill = prefill_fn or jax.jit(
+            model.prefill, static_argnums=(3,))
+        self.steps = 0
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for lane_id, lane in enumerate(self.lanes):
+            if lane.rid is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, cache1 = self._prefill(
+                self.params, jnp.asarray([req.prompt], jnp.int32),
+                None, self.max_len)
+            # splice the single-sequence cache into this lane
+            self.caches = jax.tree.map(
+                lambda full, one: _lane_set(full, one, lane_id),
+                self.caches, cache1)
+            tok = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(tok)
+            req.first_token_t = time.time()
+            lane.rid = req.rid
+            lane.pos = len(req.prompt)
+            lane.remaining = req.max_new_tokens - 1
+            self.active[req.rid] = req
+
+    # -- one decode step over all lanes -------------------------------------
+    def step(self) -> None:
+        self._admit()
+        if not self.active:
+            return
+        token = np.zeros((self.n_lanes, 1), np.int32)
+        pos = np.zeros((self.n_lanes,), np.int32)
+        for i, lane in enumerate(self.lanes):
+            if lane.rid is not None:
+                req = self.active[lane.rid]
+                token[i, 0] = req.out_tokens[-1]
+                pos[i] = lane.pos
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(token), jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.steps += 1
+        for i, lane in enumerate(self.lanes):
+            if lane.rid is None:
+                continue
+            req = self.active[lane.rid]
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            lane.pos += 1
+            lane.remaining -= 1
+            if lane.remaining <= 0 or tok == self.eos_id \
+                    or lane.pos >= self.max_len - 1:
+                req.done = True
+                req.finish_t = time.time()
+                self.finished.append(req)
+                del self.active[lane.rid]
+                self.lanes[i] = LaneState()
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        while (self.queue or self.active) and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+
+def _lane_set(full: jax.Array, one: jax.Array, lane: int) -> jax.Array:
+    """Write a batch-1 cache leaf into lane ``lane`` of the stacked cache.
+
+    Leaves are (L, B, ...) (layer-stacked) or (napp, B, ...); the batch
+    axis is axis 1.
+    """
+    if one.shape[1] == full.shape[1]:      # already full-width (rare)
+        return one.astype(full.dtype)
+    src = one[:, 0]
+    # pad/crop trailing dims (prefill cache len == prompt len)
+    dst_shape = full.shape[2:]
+    pads = []
+    slices = [slice(None)] * src.ndim
+    for i, (s, d) in enumerate(zip(src.shape[1:], dst_shape)):
+        if s < d:
+            pads.append((0, d - s))
+        else:
+            pads.append((0, 0))
+            slices[i + 1] = slice(0, d)
+    src = src[tuple(slices)]
+    if any(p != (0, 0) for p in pads):
+        src = jnp.pad(src, [(0, 0)] + pads)
+    return full.at[:, lane].set(src.astype(full.dtype))

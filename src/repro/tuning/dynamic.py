@@ -1,0 +1,44 @@
+"""Run-time AT driver: serving-time variant selection per request bucket.
+
+The paper's ``dynamic select`` (Samples 6/7) applied to the decode path:
+each sequence-length bucket gets a dynamic AT region whose alternatives are
+decode implementations (kernel block sizes / layouts); the first calls in
+each bucket measure the candidates (run-time auto-tuning happens at the
+call site, §4.1), then the winner is committed and ``OAT_DynPerfThis``
+semantics apply — later calls run the optimised variant with no tuning.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from ..core import ATContext, OAT_DYNAMIC
+from ..core.directives import dynamic_select
+from ..serving.engine import length_bucket
+
+DEFAULT_BLOCK_KS = (256, 512, 1024)
+
+
+class DecodeAutoTuner:
+    """Per-bucket dynamic select over decode variants."""
+
+    def __init__(self, ctx: ATContext, make_decode: Callable[[int], Callable],
+                 buckets=(512, 2048, 8192, 32768),
+                 block_ks=DEFAULT_BLOCK_KS):
+        self.ctx = ctx
+        self.buckets = buckets
+        self.regions = {}
+        for b in buckets:
+            name = f"DecodeBucket_{b}"
+            sel = dynamic_select(ctx, name=name)
+            for bk in block_ks:
+                sel.alternative(name=f"block_k={bk}")(make_decode(bk))
+            self.regions[b] = sel.finalize()
+        ctx.OAT_ATexec(OAT_DYNAMIC, [f"DecodeBucket_{b}" for b in buckets])
+
+    def decode(self, kv_len: int, *args, **kwargs):
+        b = length_bucket(kv_len, self.buckets)
+        return self.ctx.execute(f"DecodeBucket_{b}", *args, **kwargs)
+
+    def committed(self) -> dict[int, int | None]:
+        return {b: self.ctx.dynamic_state[f"DecodeBucket_{b}"].committed
+                for b in self.buckets}

@@ -1,0 +1,141 @@
+"""Install-time AT driver: machine-dependent kernel performance parameters.
+
+The paper's install-time phase tunes PPs that depend only on the machine
+(Sample 1: unroll depth).  Here those are the Pallas kernel block shapes.
+``varied`` ranges are MXU/VMEM-aligned (multiples of 128 on lane dims, 8 on
+sublane dims) — the documented hardware adaptation of the paper's 1..16
+unroll range.
+
+Executors:
+* on TPU — wall-clock over the real kernel (WallClockExecutor);
+* on CPU (this container) — interpret-mode wall-clock for small shapes,
+  or the analytic VMEM-pressure cost model (default: fast, deterministic;
+  penalises tiles that bust the ~16 MB more-than-half-VMEM budget and
+  rewards MXU-shaped tiles).
+
+Results land in ``ops.set_tuned`` + ``OAT_InstallParam.dat`` so every later
+phase (and the serving engine) picks them up — the FIBER hierarchy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import (ATContext, Fitting, OAT_INSTALL, Varied,
+                    WallClockExecutor)
+from ..core.directives import install_unroll, install_variable
+from ..kernels import ops
+from ..kernels.flash_attention import attention_vmem_bytes
+from ..kernels.matmul import matmul_vmem_bytes
+from ..kernels.ssm_scan import ssm_vmem_bytes
+
+VMEM_BUDGET = 16 * 1024 * 1024      # ~half of v5e VMEM for double-buffering
+
+
+def _vmem_cost(used: int, mxu_aligned: bool, grid_steps: float) -> float:
+    """Analytic install-time cost: grid overhead + VMEM pressure penalty.
+
+    Smaller grids amortise better until the working set busts VMEM; tiles
+    not multiple-of-128 on the MXU dims waste systolic cycles.
+    """
+    over = max(0.0, used / VMEM_BUDGET - 1.0)
+    return grid_steps * (1.0 + 4.0 * over) * (1.0 if mxu_aligned else 2.0)
+
+
+def register_kernel_regions(ctx: ATContext, *, m: int = 2048,
+                            n: int = 2048, k: int = 2048,
+                            seq: int = 2048, d_head: int = 128,
+                            d_inner: int = 4096, d_state: int = 16) -> None:
+    """Declare the install-time regions for every kernel PP."""
+
+    @install_variable(
+        ctx, name="MatmulBlocks",
+        varied=Varied(("bm", "bn", "bk"), values=(128, 256, 512)),
+        search="ad-hoc")
+    def matmul_blocks(bm=128, bn=128, bk=128):
+        used = matmul_vmem_bytes(bm, bn, bk)
+        grid = (m / bm) * (n / bn) * (k / bk)
+        return lambda: _vmem_cost(used, bm % 8 == 0 and bn % 128 == 0
+                                  and bk % 128 == 0, grid)
+
+    @install_variable(
+        ctx, name="FlashBlocks",
+        varied=Varied(("block_q", "block_k"), values=(128, 256, 512, 1024)),
+        search="ad-hoc")
+    def flash_blocks(block_q=128, block_k=128):
+        used = attention_vmem_bytes(block_q, block_k, d_head)
+        grid = (seq / block_q) * (seq / block_k)
+        return lambda: _vmem_cost(used, block_q % 128 == 0
+                                  and block_k % 128 == 0, grid)
+
+    @install_variable(
+        ctx, name="SsmChunk", varied=Varied(("chunk",),
+                                            values=(32, 64, 128, 256, 512)),
+        fitting=Fitting.dspline())
+    def ssm_chunk(chunk=64):
+        used = ssm_vmem_bytes(chunk, d_inner, d_state)
+        grid = seq / chunk
+        return lambda: _vmem_cost(used, chunk % 8 == 0, grid)
+
+
+def run_install_tuning(ctx: ATContext, wall_clock: bool = False) -> dict:
+    """Execute install-time AT and publish tuned PPs to the kernel layer."""
+    if not ctx.store.has_default_bps():
+        for k_, v in (("OAT_NUMPROCS", 1), ("OAT_STARTTUNESIZE", 1024),
+                      ("OAT_ENDTUNESIZE", 4096), ("OAT_SAMPDIST", 1024)):
+            ctx.store.set_bp(k_, v)
+    if wall_clock:
+        ctx._executor_factory = _wallclock_factory
+    ctx.OAT_ATexec(OAT_INSTALL, None)
+    tuned = {}
+    for region, mapping in (
+            ("MatmulBlocks", {"MatmulBlocks_BM": "block_m",
+                              "MatmulBlocks_BN": "block_n",
+                              "MatmulBlocks_BK": "block_k"}),
+            ("FlashBlocks", {"FlashBlocks_BLOCK_Q": "block_q",
+                             "FlashBlocks_BLOCK_K": "block_k"}),
+            ("SsmChunk", {"SsmChunk_CHUNK": "chunk"})):
+        pps = {}
+        for qual, bare in mapping.items():
+            e = ctx.store.entry(qual)
+            if e is not None:
+                pps[bare] = int(e.value)
+        if pps:
+            tuned[region] = pps
+    if "MatmulBlocks" in tuned:
+        ops.set_tuned("matmul", **tuned["MatmulBlocks"])
+    if "FlashBlocks" in tuned:
+        ops.set_tuned("flash_attention", **tuned["FlashBlocks"])
+    if "SsmChunk" in tuned:
+        ops.set_tuned("ssm_scan", **tuned["SsmChunk"])
+    return tuned
+
+
+def _wallclock_factory(region, bp_env):
+    """Interpret-mode wall-clock executor (small shapes, CPU)."""
+    key = jax.random.PRNGKey(0)
+
+    def make_variant(assignment):
+        bare = {k.split("_", 1)[1].lower(): v for k, v in assignment.items()}
+        if region.name == "MatmulBlocks":
+            x = jax.random.normal(key, (256, 256), jnp.float32)
+            y = jax.random.normal(key, (256, 256), jnp.float32)
+            from ..kernels.matmul import matmul
+            return lambda: matmul(x, y, block_m=bare["bm"], block_n=bare["bn"],
+                                  block_k=bare["bk"], interpret=True)
+        if region.name == "FlashBlocks":
+            q = jax.random.normal(key, (1, 2, 256, 64), jnp.float32)
+            from ..kernels.flash_attention import flash_attention
+            return lambda: flash_attention(
+                q, q, q, block_q=min(bare["block_q"], 256),
+                block_k=min(bare["block_k"], 256), interpret=True)
+        x = jax.random.normal(key, (1, 256, 64), jnp.float32)
+        a = -jnp.ones((64, 8), jnp.float32)
+        b = jax.random.normal(key, (1, 256, 8), jnp.float32)
+        d = jnp.ones((64,), jnp.float32)
+        from ..kernels.ssm_scan import selective_scan
+        return lambda: selective_scan(
+            x, jax.nn.softplus(x), a, b, b, d,
+            chunk=min(bare["chunk"], 256), interpret=True)
+
+    return WallClockExecutor(make_variant, repeats=1, warmup=1)

@@ -1,0 +1,150 @@
+"""Before-execute-time AT driver: distribution-layout selection per
+(arch x shape x mesh) — the paper's ``static select according estimated``
+made first-class.
+
+Basic parameters (the paper's BP concept): arch name, seq_len,
+global_batch, mesh shape.  Performance parameters: layout plan name, remat
+policy, microbatch count.  The cost definition function is the three-term
+roofline (cost.py's ``roofline_seconds``), evaluated either
+
+* **analytically** (fast path, used in tests): analytic.step_costs + a
+  per-plan collective model; or
+* **measured from a real dry-run compile** (the §Perf path): the candidate
+  is lowered + compiled on the production mesh and the parsed loop-aware
+  HLO terms are the cost — this is 'measurement' in the paper's sense,
+  with compile-time roofline standing in for wall-clock (CPU container).
+
+Results are recorded per BP tuple in ``OAT_StaticParam.dat`` exactly like
+the paper's ``(OAT_PROBSIZE 1024 (MyMatMul_I 4) ...)`` records.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable
+
+from ..configs import get_arch, get_shape
+from ..core import ATContext, OAT_STATIC
+from ..core.cost import roofline_terms
+from ..core.directives import SelectRegion
+from ..launch.analytic import model_flops, step_costs
+from ..launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+TRAIN_PLANS = ("tp", "fsdp")
+DECODE_PLANS = ("tp", "decode_seq", "decode_resident")
+
+
+def candidate_plans(kind: str) -> tuple[str, ...]:
+    return DECODE_PLANS if kind == "decode" else TRAIN_PLANS
+
+
+def analytic_plan_cost(arch_name: str, shape_name: str, plan: str,
+                       chips: int = 256, model_axis: int = 16) -> float:
+    """Roofline bound (s) for one layout plan, fully analytic.
+
+    Collective model per plan (bytes per step, whole mesh):
+    * tp      — per-layer activation all-reduce on the model axis
+                (2 x hidden per layer, both matmul families) + grad
+                reduce-scatter (train);
+    * fsdp    — per-layer weight all-gather (layer params / model axis)
+                + grad reduce-scatter;
+    * decode_seq — LSE merge all-reduce over the model axis per layer
+                (tiny) + cache stays put.
+    """
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    ana = step_costs(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+    t = b * (1 if shape.kind == "decode" else s)
+    d = cfg.d_model
+    data_axis = max(chips // model_axis, 1)
+    layer_params = (cfg.param_count()
+                    - cfg.padded_vocab * d * (1 if cfg.tie_embeddings
+                                              else 2)) / max(cfg.n_layers, 1)
+    bf16 = 2
+    compute_scale = 1.0
+    mem_scale = 1.0
+    if plan == "tp":
+        # activation all-reduce on the model axis, per matmul family
+        coll = 2 * t * d * bf16 * cfg.n_layers * 2
+        if shape.kind == "decode" and cfg.ssm_version == 0 \
+                and cfg.n_kv_heads % model_axis != 0:
+            # KV cache cannot shard over model: cache reads replicate
+            mem_scale = float(model_axis)
+    elif plan == "fsdp":
+        # per-layer weight all-gather; model axis does replicated compute
+        coll = layer_params * bf16 * cfg.n_layers * (model_axis - 1) \
+            / model_axis
+        compute_scale = float(model_axis)
+    elif plan == "decode_resident":
+        # weights resident on the model axis: per-layer activation
+        # all-reduce only; no weight gather ever
+        coll = 2 * t * d * bf16 * cfg.n_layers * 2
+    else:  # decode_seq: seq-sharded cache + LSE-merge all-reduce (tiny)
+        coll = 2 * t * cfg.n_heads * (cfg.head_dim + 2) * 4 * cfg.n_layers
+    if shape.kind == "decode" and plan != "decode_resident":
+        # weights FSDP-sharded over data are re-gathered every step
+        coll += layer_params * bf16 * cfg.n_layers * (data_axis - 1) \
+            / data_axis
+    if shape.kind == "train":
+        coll += cfg.param_count() * 4          # grad reduce-scatter fp32
+        if plan == "fsdp":
+            coll += layer_params * bf16 * cfg.n_layers  # bwd re-gather
+    terms = roofline_terms(ana.flops * compute_scale,
+                           ana.bytes * mem_scale, coll, chips,
+                           peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW,
+                           ici_bw=ICI_BW)
+    # rank by the un-overlapped sum: plans that tie on the dominant term
+    # still separate on the terms they actually change
+    return terms.compute_s + terms.memory_s + terms.collective_s
+
+
+def compiled_plan_cost(arch_name: str, shape_name: str, plan: str,
+                       multi_pod: bool = False, **overrides) -> float:
+    """The measured path: dry-run compile the candidate and score it."""
+    from ..launch.dryrun import dryrun_cell
+    from ..launch.roofline import from_artifact
+    rec = dryrun_cell(arch_name, shape_name, multi_pod=multi_pod,
+                      plan_name=plan, verbose=False, **overrides)
+    return from_artifact(rec).bound_s
+
+
+def tune_layout(ctx: ATContext, arch_name: str, shape_name: str,
+                cost_fn: Callable[[str], float] | None = None,
+                chips: int = 256) -> str:
+    """Static-AT select over layout plans; returns the winner and records
+    it in the FIBER store + static param file."""
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    plans = candidate_plans(shape.kind)
+    cost_fn = cost_fn or (
+        lambda p: analytic_plan_cost(arch_name, shape_name, p, chips))
+
+    region_name = f"Layout_{arch_name}_{shape_name}".replace("-", "_") \
+        .replace(".", "_")
+    sel = SelectRegion(ctx, "static", region_name,
+                       params=["bp OAT_PROBSIZE", "bp OAT_NUMPROCS"])
+    for p in plans:
+        cost = cost_fn(p)
+        sel.alternative(according=f"estimated {cost!r}", name=p)(
+            lambda p=p: p)
+    region = sel.finalize()
+
+    if not ctx.store.has_default_bps():
+        ctx.store.set_bp("OAT_NUMPROCS", chips)
+        ctx.store.set_bp("OAT_STARTTUNESIZE", shape.seq_len)
+        ctx.store.set_bp("OAT_ENDTUNESIZE", shape.seq_len)
+        ctx.store.set_bp("OAT_SAMPDIST", max(shape.seq_len, 1))
+    ctx.phase_ran["install"] = True       # layout tuning has no install deps
+    ctx.OAT_ATexec(OAT_STATIC, [region_name])
+    e = ctx.store.entry(f"{region_name}_SELECT")
+    idx = int(e.value) if e is not None else 0
+    return plans[idx]
+
+
+def tune_all_layouts(ctx: ATContext, cells, cost_fn=None) -> dict:
+    out = {}
+    for arch_name, shape_name in cells:
+        out[(arch_name, shape_name)] = tune_layout(
+            ctx, arch_name, shape_name, cost_fn)
+    return out

@@ -1,0 +1,21 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture
+def ctx(tmp_path):
+    from repro.core import ATContext
+    return ATContext(workdir=str(tmp_path))
+
+
+@pytest.fixture
+def ctx_with_bps(ctx):
+    ctx.store.set_bp("OAT_NUMPROCS", 4)
+    ctx.store.set_bp("OAT_STARTTUNESIZE", 1024)
+    ctx.store.set_bp("OAT_ENDTUNESIZE", 3072)
+    ctx.store.set_bp("OAT_SAMPDIST", 1024)
+    return ctx

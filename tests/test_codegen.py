@@ -1,0 +1,258 @@
+"""OATCodeGen — paper §5 loop transforms (Samples 8, 9) + unrolling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.codegen import (OATCodeGen, enumerate_unroll_variants,
+                                parse_loop_nest, render, transform_fuse_all,
+                                transform_split, transform_unroll)
+from repro.core.errors import OATCodegenError
+
+
+# --------------------------------------------------------------------------
+# Sample 8: the FDM stress kernel — exactly 8 split/fusion candidates
+# --------------------------------------------------------------------------
+
+def fdm_stress(NX, NY, NZ, LAM, RIG, Q, ABSX, ABSY, ABSZ,
+               DXVX, DYVY, DZVZ, DXVY, DYVX, DXVZ, DZVX, DYVZ, DZVY,
+               SXX, SYY, SZZ, SXY, SXZ, SYZ, DT):
+    #OAT$ install LoopFusionSplit region start
+    #OAT$ name FDMStress
+    for k in range(NZ):
+        for j in range(NY):
+            for i in range(NX):
+                RL = LAM[i, j, k]
+                RM = RIG[i, j, k]
+                RM2 = RM + RM
+                RLTHETA = (DXVX[i, j, k] + DYVY[i, j, k] + DZVZ[i, j, k]) * RL
+                #OAT$ SplitPointCopyDef region start
+                QG = ABSX[i] * ABSY[j] * ABSZ[k] * Q[i, j, k]
+                #OAT$ SplitPointCopyDef region end
+                SXX[i, j, k] = (SXX[i, j, k] + (RLTHETA + RM2 * DXVX[i, j, k]) * DT) * QG
+                SYY[i, j, k] = (SYY[i, j, k] + (RLTHETA + RM2 * DYVY[i, j, k]) * DT) * QG
+                SZZ[i, j, k] = (SZZ[i, j, k] + (RLTHETA + RM2 * DZVZ[i, j, k]) * DT) * QG
+                #OAT$ SplitPoint (k, j, i)
+                STMP1 = 1.0 / RIG[i, j, k]
+                STMP2 = 1.0 / RIG[i + 1, j, k]
+                STMP4 = 1.0 / RIG[i, j, k + 1]
+                STMP3 = STMP1 + STMP2
+                RMAXY = 4.0 / (STMP3 + 1.0 / RIG[i, j + 1, k] + 1.0 / RIG[i + 1, j + 1, k])
+                RMAXZ = 4.0 / (STMP3 + STMP4 + 1.0 / RIG[i + 1, j, k + 1])
+                RMAYZ = 4.0 / (STMP3 + STMP4 + 1.0 / RIG[i, j + 1, k + 1])
+                #OAT$ SplitPointCopyInsert
+                SXY[i, j, k] = (SXY[i, j, k] + (RMAXY * (DXVY[i, j, k] + DYVX[i, j, k])) * DT) * QG
+                SXZ[i, j, k] = (SXZ[i, j, k] + (RMAXZ * (DXVZ[i, j, k] + DZVX[i, j, k])) * DT) * QG
+                SYZ[i, j, k] = (SYZ[i, j, k] + (RMAYZ * (DYVZ[i, j, k] + DZVY[i, j, k])) * DT) * QG
+    #OAT$ install LoopFusionSplit region end
+    return SXX, SYY, SZZ, SXY, SXZ, SYZ
+
+
+def _fdm_inputs(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    shp = (n + 1, n + 1, n + 1)
+    arrs = dict(LAM=rng.normal(size=shp),
+                RIG=rng.uniform(0.5, 2.0, size=shp),
+                Q=rng.normal(size=shp), ABSX=rng.normal(size=n + 1),
+                ABSY=rng.normal(size=n + 1), ABSZ=rng.normal(size=n + 1))
+    for k in ("DXVX", "DYVY", "DZVZ", "DXVY", "DYVX", "DXVZ", "DZVX",
+              "DYVZ", "DZVY"):
+        arrs[k] = rng.normal(size=shp)
+    state = {k: rng.normal(size=shp) for k in
+             ("SXX", "SYY", "SZZ", "SXY", "SXZ", "SYZ")}
+    return arrs, state
+
+
+@pytest.fixture(scope="module")
+def fdm_variants(tmp_path_factory):
+    gen = OATCodeGen(str(tmp_path_factory.mktemp("oat")))
+    return gen.generate(fdm_stress)["FDMStress"]
+
+
+class TestSample8:
+    def test_exactly_8_variants(self, fdm_variants):
+        assert len(fdm_variants) == 8
+        descs = [v.description for v in fdm_variants]
+        assert descs[0] == "baseline"
+        assert sum("split@" in d and "fuse" not in d and "collapse" not in d
+                   for d in descs) == 3          # splits at k, j, i
+        assert any("fuse" in d and "split" not in d for d in descs)
+        assert any("collapse" in d and "split" not in d for d in descs)
+        assert any("split" in d and "fuse" in d for d in descs)
+        assert any("split" in d and "collapse" in d for d in descs)
+
+    def test_variants_numerically_identical(self, fdm_variants):
+        """Flow-dependent QG is recomputed (SplitPointCopyDef semantics =
+        rematerialisation) so every variant matches bit-for-bit-ish."""
+        arrs, state0 = _fdm_inputs()
+        base = fdm_variants[0].fn(
+            4, 4, 4, **arrs, **{k: v.copy() for k, v in state0.items()},
+            DT=0.1)
+        for v in fdm_variants[1:]:
+            out = v.fn(4, 4, 4, **arrs,
+                       **{k: vv.copy() for k, vv in state0.items()}, DT=0.1)
+            for b, o in zip(base, out):
+                np.testing.assert_allclose(b, o, rtol=1e-12,
+                                           err_msg=v.description)
+
+    def test_generated_file_written(self, tmp_path):
+        gen = OATCodeGen(str(tmp_path))
+        gen.generate(fdm_stress)
+        out = tmp_path / "OAT" / "OAT_fdm_stress.py"
+        assert out.exists()
+        src = out.read_text()
+        assert "QG" in src and src.count("def fdm_stress__FDMStress__v") == 8
+
+
+def test_split_without_copydef_raises():
+    """§5.2: a flow-dependent scalar crossing the split point without a
+    re-computation copy is illegal."""
+
+    def bad(N, A, B):
+        #OAT$ install LoopFusionSplit region start
+        #OAT$ name Bad
+        for i in range(N):
+            t = A[i] * 2.0
+            A[i] = t
+            #OAT$ SplitPoint (i)
+            B[i] = t + 1.0
+        #OAT$ install LoopFusionSplit region end
+        return A, B
+
+    gen = OATCodeGen("/tmp")
+    with pytest.raises(OATCodegenError, match="SplitPointCopyDef"):
+        gen.generate(bad)
+
+
+# --------------------------------------------------------------------------
+# Sample 9: statement re-ordering (RotationOrder) x fusion
+# --------------------------------------------------------------------------
+
+def fvm_vel(NX, NY, NZ, DEN, DXSXX, DYSXY, DZSXZ, DXSXY, DYSYY, DZSYZ,
+            DXSXZ, DYSYZ, DZSZZ, VX, VY, VZ, DT):
+    #OAT$ install LoopFusion region start
+    #OAT$ name FVMVel
+    for k in range(NZ):
+        for j in range(NY):
+            for i in range(NX):
+                #OAT$ RotationOrder sub region start
+                ROX = 2.0 / (DEN[i, j, k] + DEN[i + 1, j, k])
+                ROY = 2.0 / (DEN[i, j, k] + DEN[i, j + 1, k])
+                ROZ = 2.0 / (DEN[i, j, k] + DEN[i, j, k + 1])
+                #OAT$ RotationOrder sub region end
+                #OAT$ RotationOrder sub region start
+                VX[i, j, k] = VX[i, j, k] + (DXSXX[i, j, k] + DYSXY[i, j, k] + DZSXZ[i, j, k]) * ROX * DT
+                VY[i, j, k] = VY[i, j, k] + (DXSXY[i, j, k] + DYSYY[i, j, k] + DZSYZ[i, j, k]) * ROY * DT
+                VZ[i, j, k] = VZ[i, j, k] + (DXSXZ[i, j, k] + DYSYZ[i, j, k] + DZSZZ[i, j, k]) * ROZ * DT
+                #OAT$ RotationOrder sub region end
+    #OAT$ install LoopFusion region end
+    return VX, VY, VZ
+
+
+class TestSample9:
+    @pytest.fixture(scope="class")
+    def variants(self, tmp_path_factory):
+        gen = OATCodeGen(str(tmp_path_factory.mktemp("oat9")))
+        return gen.generate(fvm_vel)["FVMVel"]
+
+    def test_six_variants(self, variants):
+        assert len(variants) == 6        # {nofuse, fuse2, collapse3} x
+        #                                  {grouped, interleave}
+
+    def test_numerically_identical(self, variants):
+        rng = np.random.default_rng(1)
+        n = 3
+        shp = (n + 1, n + 1, n + 1)
+        arrs = {k: rng.normal(size=shp) for k in
+                ["DXSXX", "DYSXY", "DZSXZ", "DXSXY", "DYSYY", "DZSYZ",
+                 "DXSXZ", "DYSYZ", "DZSZZ"]}
+        arrs["DEN"] = rng.uniform(0.5, 2.0, size=shp)
+        v0 = {k: rng.normal(size=shp) for k in ["VX", "VY", "VZ"]}
+        base = variants[0].fn(n, n, n, **arrs,
+                              **{k: v.copy() for k, v in v0.items()}, DT=0.1)
+        for v in variants[1:]:
+            out = v.fn(n, n, n, **arrs,
+                       **{k: vv.copy() for k, vv in v0.items()}, DT=0.1)
+            for b, o in zip(base, out):
+                np.testing.assert_allclose(b, o, rtol=1e-12,
+                                           err_msg=v.description)
+
+    def test_interleaving_actually_happened(self, variants):
+        """The generated interleaved code matches the paper's printed
+        output: ROX; VX; ROY; VY; ROZ; VZ."""
+        inter = next(v for v in variants
+                     if "interleave" in v.description
+                     and "nofuse" in v.description)
+        order = [l.split("=")[0].strip().split("[")[0]
+                 for l in inter.source.splitlines()
+                 if l.strip().startswith(("RO", "VX", "VY", "VZ"))]
+        assert order == ["ROX", "VX", "ROY", "VY", "ROZ", "VZ"]
+
+
+# --------------------------------------------------------------------------
+# unroll transform
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 17), factor=st.integers(1, 6))
+def test_unroll_identity(n, factor):
+    """Unrolled loop (with remainder) computes the same result for every
+    (size, factor) combination — including non-dividing remainders."""
+    src = ["for i in range(N):",
+           "    ACC[i] = A[i] * 2.0 + i"]
+    nodes = parse_loop_nest(src)
+    unrolled = transform_unroll(nodes, "i", factor)
+    code = "\n".join(render(unrolled))
+    a = np.arange(n, dtype=np.float64)
+    acc1 = np.zeros(n)
+    acc2 = np.zeros(n)
+    exec(compile("\n".join(src), "<base>", "exec"),
+         {"N": n, "A": a, "ACC": acc1})
+    exec(compile(code, "<unrolled>", "exec"), {"N": n, "A": a, "ACC": acc2})
+    np.testing.assert_allclose(acc1, acc2)
+
+
+def test_unroll_region_variants_run():
+    def matmul_kernel(N, A, B, C):
+        #OAT$ install unroll region start
+        #OAT$ name MyMatMul
+        #OAT$ varied (i, j) from 1 to 4
+        for i in range(N):
+            for j in range(N):
+                for k in range(N):
+                    A[i, j] = A[i, j] + B[i, k] * C[k, j]
+        #OAT$ install unroll region end
+        return A
+
+    gen = OATCodeGen("/tmp")
+    rng = np.random.default_rng(0)
+    n = 6
+    b, c = rng.normal(size=(n, n)), rng.normal(size=(n, n))
+    base = np.zeros((n, n))
+    matmul_kernel(n, base, b, c)
+    for fi in (1, 2, 3):
+        for fj in (1, 4):
+            v = gen.unroll_variant(matmul_kernel, "MyMatMul",
+                                   {"i": fi, "j": fj})
+            a = np.zeros((n, n))
+            v.fn(n, a, b, c)
+            np.testing.assert_allclose(a, base, rtol=1e-12,
+                                       err_msg=f"unroll i={fi} j={fj}")
+
+
+def test_fuse_preserves_iteration_space():
+    src = ["for i in range(2, N):",
+           "    for j in range(M):",
+           "        OUT[i, j] = A[i] + 10.0 * j"]
+    nodes = parse_loop_nest(src)
+    fused = transform_fuse_all(nodes, ("i", "j"))
+    code = "\n".join(render(fused))
+    n, m = 7, 5
+    a = np.arange(n, dtype=np.float64)
+    o1 = np.zeros((n, m))
+    o2 = np.zeros((n, m))
+    exec(compile("\n".join(src), "<b>", "exec"),
+         {"N": n, "M": m, "A": a, "OUT": o1})
+    exec(compile(code, "<f>", "exec"), {"N": n, "M": m, "A": a, "OUT": o2})
+    np.testing.assert_allclose(o1, o2)
+    assert code.count("for ") == 1      # genuinely collapsed

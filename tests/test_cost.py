@@ -1,0 +1,58 @@
+"""`according` clauses + Fortran expression translation + roofline model."""
+import math
+
+import pytest
+
+from repro.core.cost import (According, RooflineTerms, eval_expr,
+                             fortran_to_python, roofline_terms)
+
+
+class TestFortranTranslation:
+    def test_d_exponent(self):
+        assert eval_expr("2.0d0 * 3", {}) == 6.0
+        assert eval_expr("1.5D2", {}) == 150.0
+
+    def test_dlog(self):
+        assert eval_expr("dlog(OAT_PROBSIZE)", {"OAT_PROBSIZE": math.e}) \
+            == pytest.approx(1.0)
+
+    def test_sample5_expression(self):
+        env = {"CacheSize": 64, "OAT_PROBSIZE": 2048, "OAT_NUMPROC": 4}
+        v = eval_expr(
+            "2.0d0*CacheSize*OAT_PROBSIZE*OAT_PROBSIZE / (3.0d0*OAT_NUMPROC)",
+            env)
+        assert v == pytest.approx(2.0 * 64 * 2048 * 2048 / 12.0)
+
+    def test_logical_ops(self):
+        assert eval_expr("(1 .lt. 2) .and. .true.", {}) is True
+        assert eval_expr("(3 .le. 2) .or. (1 .eq. 1)", {}) is True
+
+
+class TestAccording:
+    def test_parse_estimated(self):
+        a = According.parse("estimated 2.0d0*n / p")
+        assert a.estimated_cost({"n": 6, "p": 3}) == 4.0
+
+    def test_parse_min_and_condition_sample6(self):
+        a = According.parse("min (eps) .and. condition (iter < 5)")
+        assert a.minimize == "eps"
+        assert a.conditions == ["iter < 5"]
+        assert a.conditions_hold({"iter": 3})
+        assert not a.conditions_hold({"iter": 9})
+
+    def test_callable_estimated(self):
+        a = According(estimated=lambda env: env["x"] * 2)
+        assert a.estimated_cost({"x": 21}) == 42
+
+
+class TestRoofline:
+    def test_terms_and_dominant(self):
+        t = roofline_terms(total_flops=197e12 * 256,       # 1s compute
+                           total_bytes=819e9 * 256 * 0.5,  # 0.5s memory
+                           collective_bytes=50e9 * 256 * 2,  # 2s collective
+                           chips=256)
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(0.5)
+        assert t.collective_s == pytest.approx(2.0)
+        assert t.dominant == "collective"
+        assert t.bound_s == pytest.approx(2.0)

@@ -1,0 +1,147 @@
+"""#OAT$ directive parsing + the full preprocessor->ATexec pipeline."""
+import numpy as np
+import pytest
+
+from repro.core import OAT_INSTALL, CountingExecutor
+from repro.core.dsl import (parse_fitting, parse_parameter, parse_search,
+                            parse_varied, preprocess)
+
+
+class TestSubtypeParsers:
+    def test_varied(self):
+        v = parse_varied("(i, j) from 1 to 16")
+        assert v.names == ("i", "j")
+        assert v.candidates() == tuple(range(1, 17))
+        v2 = parse_varied("x from 2 to 10 step 2")
+        assert v2.candidates() == (2, 4, 6, 8, 10)
+
+    def test_fitting(self):
+        f = parse_fitting("least-squares 5 sampled (1-5, 8, 16)")
+        assert f.method == "least-squares"
+        assert f.order == 5
+        assert f.sampled == [1, 2, 3, 4, 5, 8, 16]
+        assert parse_fitting("dspline").method == "dspline"
+        assert parse_fitting("auto").method == "auto"
+        fu = parse_fitting("user-defined c0 + c1*x sampled (1, 4, 9)")
+        assert fu.method == "user-defined" and fu.expr == "c0 + c1*x"
+
+    def test_parameter(self):
+        ps = parse_parameter("(bp n, in CacheSize, out CacheLine)")
+        assert [(p.name, p.attr) for p in ps] == [
+            ("n", "bp"), ("CacheSize", "in"), ("CacheLine", "out")]
+
+    def test_search(self):
+        assert parse_search("Brute-force") == "brute-force"
+        assert parse_search("AD-HOC") == "ad-hoc"
+
+
+def annotated_matmul(N, A, B, C):
+    #OAT$ install unroll region start
+    #OAT$ name MyMatMul
+    #OAT$ varied (i, j) from 1 to 4
+    #OAT$ search AD-HOC
+    for i in range(N):
+        for j in range(N):
+            for k in range(N):
+                A[i, j] = A[i, j] + B[i, k] * C[k, j]
+    #OAT$ install unroll region end
+    return A
+
+
+def test_preprocess_registers_region(ctx_with_bps, tmp_path):
+    regions = preprocess(annotated_matmul, ctx_with_bps, str(tmp_path))
+    assert "MyMatMul" in regions
+    r = regions["MyMatMul"]
+    assert r.at_type == "install" and r.feature == "unroll"
+    assert r.varied.names == ("i", "j")
+    assert r.search_method == "ad-hoc"
+    assert (tmp_path / "OAT" / "OAT_annotated_matmul.py").exists()
+
+
+def test_pipeline_tunes_unroll_through_atexec(ctx_with_bps, tmp_path):
+    """The complete paper flow: annotate -> OATCodeGen -> OAT_ATexec ->
+    tuned unrolled variant that computes the right answer."""
+    regions = preprocess(annotated_matmul, ctx_with_bps, str(tmp_path))
+    region = regions["MyMatMul"]
+
+    rng = np.random.default_rng(0)
+    n = 8
+    b, c = rng.normal(size=(n, n)), rng.normal(size=(n, n))
+    want = b @ c
+
+    calls = CountingExecutor(lambda asg: abs(asg["MyMatMul_I"] - 2)
+                             + abs(asg["MyMatMul_J"] - 2))
+    ctx_with_bps._executor_factory = lambda r, env: calls
+    ctx_with_bps.OAT_ATexec(OAT_INSTALL, ["MyMatMul"])
+    assert calls.count == 8          # AD-HOC: 4 + 4
+    assert ctx_with_bps.store.entry("MyMatMul_I").value == 2
+
+    # run the tuned variant: generator called with tuned PPs
+    variant = region.fn(i=2, j=2)
+    a = np.zeros((n, n))
+    variant(n, a, b, c)
+    np.testing.assert_allclose(a, want, rtol=1e-10)
+    # unrolled source really was generated with factor 2
+    gen = region.metadata["codegen"]
+    v = gen.unroll_variant(annotated_matmul, "MyMatMul", {"i": 2, "j": 2})
+    assert "i + 1" in v.source and "j + 1" in v.source
+
+
+def fused_split_annotated(N, A, B, C):
+    #OAT$ install LoopFusionSplit region start
+    #OAT$ name SmallSplit
+    for i in range(N):
+        for j in range(N):
+            #OAT$ SplitPointCopyDef region start
+            T = C[i, j] * 2.0
+            #OAT$ SplitPointCopyDef region end
+            A[i, j] = A[i, j] + T
+            #OAT$ SplitPoint (i, j)
+            B[i, j] = B[i, j] * T
+    #OAT$ install LoopFusionSplit region end
+    return A, B
+
+
+def test_preprocess_fusionsplit_becomes_select(ctx_with_bps, tmp_path):
+    regions = preprocess(fused_split_annotated, ctx_with_bps, str(tmp_path))
+    r = regions["SmallSplit"]
+    assert r.feature == "select"
+    # 2-nest with split point: baseline + split@i + split@j + fuse +
+    # split+fuse
+    assert len(r.subregions) == 5
+    rng = np.random.default_rng(1)
+    n = 5
+    a0, b0 = rng.normal(size=(n, n)), rng.normal(size=(n, n))
+    c0 = rng.normal(size=(n, n))
+    base = None
+    for sub in r.subregions:
+        a, b = a0.copy(), b0.copy()
+        out = sub.fn(n, a, b, c0)
+        if base is None:
+            base = out
+        else:
+            for x, y in zip(base, out):
+                np.testing.assert_allclose(x, y, rtol=1e-12,
+                                           err_msg=sub.name)
+
+
+def test_split_with_clobbered_recompute_raises(ctx_with_bps, tmp_path):
+    """The legality check the paper leaves implicit: a CopyDef whose inputs
+    are overwritten before the split point cannot be re-computed."""
+    from repro.core.errors import OATCodegenError
+
+    def clobbered(N, A, B):
+        #OAT$ install LoopFusionSplit region start
+        #OAT$ name Clobbered
+        for i in range(N):
+            #OAT$ SplitPointCopyDef region start
+            T = A[i] * 2.0
+            #OAT$ SplitPointCopyDef region end
+            A[i] = A[i] + T
+            #OAT$ SplitPoint (i)
+            B[i] = B[i] * T
+        #OAT$ install LoopFusionSplit region end
+        return A, B
+
+    with pytest.raises(OATCodegenError, match="overwritten"):
+        preprocess(clobbered, ctx_with_bps, str(tmp_path))

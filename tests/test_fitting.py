@@ -1,0 +1,91 @@
+"""Fitting (§3.4.3): least-squares / dspline / user-defined / auto."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fitting import (auto_sample_points, fit_auto, fit_dspline,
+                                fit_polynomial, fit_user_defined,
+                                fitted_minimum)
+from repro.core.params import parse_sampled
+from repro.core.region import Fitting
+
+
+def test_parse_sampled_paper_notation():
+    assert parse_sampled("(1-5, 8, 16)") == [1, 2, 3, 4, 5, 8, 16]
+    assert parse_sampled("1, 2, 3") == [1, 2, 3]
+    assert parse_sampled([4, 5]) == [4, 5]
+
+
+def test_polynomial_exact_recovery():
+    xs = [1, 2, 3, 4, 5, 8, 16]
+    f = lambda x: 2.0 * (x - 6.0) ** 2 + 1.0
+    pred = fit_polynomial(xs, [f(x) for x in xs], 2)
+    grid = np.arange(1, 17)
+    np.testing.assert_allclose(pred(grid), [f(x) for x in grid], rtol=1e-8)
+
+
+def test_sample1_least_squares_order5():
+    """Sample 1: order-5 LS over samples (1-5, 8, 16) finds an unmeasured
+    optimum on a realistic unroll cost curve."""
+    xs = parse_sampled("(1-5, 8, 16)")
+    cost = lambda u: 10.0 / u + 0.15 * u       # sweet spot ~ 8.2
+    ys = [cost(x) for x in xs]
+    best = fitted_minimum(Fitting.least_squares(5, xs), xs, ys,
+                          range(1, 17))
+    true_best = min(range(1, 17), key=cost)
+    assert abs(best - true_best) <= 1
+
+
+def test_dspline_interpolates_samples_exactly():
+    xs = [1, 3, 5, 9, 16]
+    ys = [5.0, 2.0, 4.0, 1.0, 8.0]
+    pred = fit_dspline(xs, ys)
+    np.testing.assert_allclose(pred(np.array(xs, float)), ys, atol=1e-9)
+
+
+def test_dspline_minimum_between_samples():
+    xs = [1, 4, 8, 12, 16]
+    f = lambda x: (x - 6.0) ** 2
+    best = fitted_minimum(Fitting.dspline(xs), xs, [f(x) for x in xs],
+                          range(1, 17))
+    assert abs(best - 6) <= 1
+
+
+def test_user_defined_expression():
+    """'infer using least squares with the user's expression' — an
+    n*log(n)-shaped cost."""
+    xs = [2, 4, 8, 16, 32]
+    ys = [3.0 * x * np.log(x) + 7.0 for x in xs]
+    pred = fit_user_defined(xs, ys, "c0 + c1*x*log(x)")
+    np.testing.assert_allclose(pred(np.array([24.0])),
+                               3.0 * 24 * np.log(24) + 7.0, rtol=1e-6)
+
+
+def test_auto_picks_reasonable_model():
+    xs = list(range(1, 17, 2))
+    f = lambda x: 0.5 * x ** 2 - 6 * x + 20
+    pred = fit_auto(xs, [f(x) for x in xs])
+    grid = np.arange(1, 17)
+    best = grid[int(np.argmin(pred(grid)))]
+    assert abs(best - 6) <= 1
+
+
+def test_auto_sample_points():
+    pts = auto_sample_points(1, 256, budget=8)
+    assert pts[0] == 1 and pts[-1] == 256
+    assert len(pts) <= 10
+    pts_small = auto_sample_points(1, 5)
+    assert pts_small == [1, 2, 3, 4, 5]
+
+
+@settings(max_examples=30, deadline=None)
+@given(opt=st.integers(2, 15), scale=st.floats(0.5, 5.0))
+def test_property_quadratic_recovery(opt, scale):
+    """Property: order-2 LS over the paper's sample set recovers the
+    optimum of any quadratic within 1 grid point."""
+    xs = [1, 2, 3, 4, 5, 8, 16]
+    ys = [scale * (x - opt) ** 2 for x in xs]
+    best = fitted_minimum(Fitting.least_squares(2, xs), xs, ys,
+                          range(1, 17))
+    assert abs(best - opt) <= 1

@@ -1,0 +1,261 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault
+tolerance, gradient compression, HLO analysis."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import checkpoint
+from repro.data import DataConfig, DataIterator, batch_for_step
+from repro.distributed.compression import (compress_roundtrip_error,
+                                           dequantize_int8, quantize_int8)
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               StragglerWatchdog,
+                                               plan_remesh)
+from repro.optim import AdamWConfig, adamw
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw.init(params)
+        cfg = AdamWConfig(lr=0.3, weight_decay=0.0, warmup_steps=0,
+                          total_steps=100, clip_norm=10.0)
+        loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+        for _ in range(60):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw.update(g, state, params, cfg)
+        np.testing.assert_allclose(params["w"], [1.0, 1.0], atol=0.05)
+
+    def test_clipping(self):
+        g = {"w": jnp.array([3.0, 4.0])}       # norm 5
+        clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+        assert gn == pytest.approx(5.0)
+        np.testing.assert_allclose(clipped["w"], [0.6, 0.8], rtol=1e-6)
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+        assert float(adamw.schedule(jnp.int32(0), cfg)) == pytest.approx(0.0)
+        assert float(adamw.schedule(jnp.int32(10), cfg)) \
+            == pytest.approx(1.0, abs=0.02)
+        assert float(adamw.schedule(jnp.int32(100), cfg)) \
+            == pytest.approx(0.1, abs=0.02)
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+class TestData:
+    CFG = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=7)
+
+    def test_deterministic_per_step(self):
+        a = batch_for_step(self.CFG, 3)
+        b = batch_for_step(self.CFG, 3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        a = batch_for_step(self.CFG, 3)
+        b = batch_for_step(self.CFG, 4)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_shards_differ_and_partition(self):
+        a = batch_for_step(self.CFG, 0, shard=0, n_shards=2)
+        b = batch_for_step(self.CFG, 0, shard=1, n_shards=2)
+        assert a["tokens"].shape[0] == 4
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_iterator_resume_exact(self):
+        it = DataIterator(self.CFG)
+        seq = [next(it)["tokens"] for _ in range(6)]
+        it2 = DataIterator(self.CFG, start_step=3)
+        for i in range(3):
+            np.testing.assert_array_equal(next(it2)["tokens"], seq[3 + i])
+
+    def test_labels_shifted(self):
+        a = batch_for_step(self.CFG, 0)
+        assert a["tokens"].shape == a["labels"].shape
+        assert (np.asarray(a["tokens"]) < 1000).all()
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"layer": {"w": jax.random.normal(k, (4, 4)),
+                      "b": jnp.zeros((4,))},
+            "step_arrays": [jnp.ones((2,)), jnp.arange(3.0)]}
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        t = _tree()
+        checkpoint.save(str(tmp_path), 5, t, extra={"arch": "x"})
+        restored, meta = checkpoint.restore(str(tmp_path), t)
+        assert meta["step"] == 5 and meta["arch"] == "x"
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), t,
+                     restored)
+
+    def test_latest_and_retention(self, tmp_path):
+        for s in (1, 2, 3, 4, 10):
+            checkpoint.save(str(tmp_path), s, _tree(s))
+        assert checkpoint.latest_step(str(tmp_path)) == 10
+        removed = checkpoint.apply_retention(str(tmp_path), keep=2,
+                                             keep_period=2)
+        left = checkpoint.available_steps(str(tmp_path))
+        assert 10 in left and 4 in left and 2 in left
+        assert 1 in removed and 3 in removed
+
+    def test_tmp_dirs_invisible(self, tmp_path):
+        """A killed writer (stale .tmp) must never be restored from."""
+        os.makedirs(tmp_path / "step_000000007.tmp")
+        assert checkpoint.latest_step(str(tmp_path)) is None
+        checkpoint.save(str(tmp_path), 3, _tree())
+        assert checkpoint.latest_step(str(tmp_path)) == 3
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = checkpoint.AsyncCheckpointer(str(tmp_path), keep=2)
+        for s in range(4):
+            ck.save(s, _tree(s))
+        ck.wait()
+        steps = checkpoint.available_steps(str(tmp_path))
+        assert steps == [2, 3]
+
+    def test_restore_into_abstract(self, tmp_path):
+        t = _tree()
+        checkpoint.save(str(tmp_path), 1, t)
+        abstract = jax.eval_shape(lambda: t)
+        restored, _ = checkpoint.restore(str(tmp_path), abstract)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), t,
+                     restored)
+
+
+# --------------------------------------------------------------------------
+# fault tolerance state machines
+# --------------------------------------------------------------------------
+
+class TestFaultTolerance:
+    def test_heartbeat_detects_silent_host(self):
+        hb = HeartbeatMonitor(n_hosts=4, timeout_s=10.0)
+        for h in range(4):
+            hb.beat(h, now=0.0)
+        hb.beat(0, now=11.0)
+        hb.beat(1, now=11.0)
+        hb.beat(2, now=11.0)
+        failed = hb.tick(now=12.0)
+        assert failed == {3}
+        assert hb.alive == [0, 1, 2]
+
+    def test_remesh_keeps_model_axis(self):
+        plan = plan_remesh((2, 16, 16), ("pod", "data", "model"),
+                           surviving_chips=480, resume_step=100)
+        assert plan.new_shape[-1] == 16
+        assert plan.axis_names[-1] == "model"
+        total = np.prod(plan.new_shape)
+        assert total <= 480 and total % 16 == 0
+        assert plan.resume_step == 100
+        assert plan.batch_scale < 1.0
+
+    def test_remesh_folds_lost_pod(self):
+        plan = plan_remesh((2, 16, 16), ("pod", "data", "model"),
+                           surviving_chips=256, resume_step=5)
+        assert np.prod(plan.new_shape) == 256
+        assert plan.new_shape[-1] == 16
+
+    def test_remesh_impossible_raises(self):
+        with pytest.raises(RuntimeError):
+            plan_remesh((16, 16), ("data", "model"), surviving_chips=8,
+                        resume_step=0)
+
+    def test_straggler_ejection(self):
+        wd = StragglerWatchdog(n_hosts=4, z_threshold=2.0,
+                               strikes_to_eject=3)
+        eject = False
+        for step in range(10):
+            for h in range(3):
+                wd.observe(h, 1.0 + 0.01 * h)
+            eject = wd.observe(3, 10.0 if step >= 4 else 1.0)
+            if eject:
+                break
+        assert eject
+
+    def test_steady_fleet_not_ejected(self):
+        wd = StragglerWatchdog(n_hosts=4)
+        for _ in range(50):
+            for h in range(4):
+                assert not wd.observe(h, 1.0 + 0.02 * h)
+
+
+# --------------------------------------------------------------------------
+# gradient compression
+# --------------------------------------------------------------------------
+
+class TestCompression:
+    def test_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1024,)) * 3.0
+        err = compress_roundtrip_error(x)
+        amax = float(jnp.max(jnp.abs(x)))
+        assert float(err) <= amax / 127.0 * 0.51 + 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 100))
+    def test_property_quantize_bounded(self, scale, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
+        q, s = quantize_int8(x)
+        back = dequantize_int8(q, s)
+        assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-9
+
+    def test_stochastic_rounding_unbiased(self):
+        x = jnp.full((20000,), 0.3)
+        q, s = quantize_int8(x, key=jax.random.PRNGKey(1))
+        mean = float(dequantize_int8(q, s).mean())
+        assert abs(mean - 0.3) < 0.003
+
+
+# --------------------------------------------------------------------------
+# HLO analysis
+# --------------------------------------------------------------------------
+
+class TestHloAnalysis:
+    def test_loop_aware_flops_exact(self):
+        from repro.launch.hlo_analysis import analyze_module
+
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        def scanned(x, ws):
+            out, _ = jax.lax.scan(body, x, ws)
+            return out.sum()
+
+        x = jnp.zeros((64, 32))
+        ws = jnp.zeros((5, 32, 32))
+        comp = jax.jit(scanned).lower(x, ws).compile()
+        res = analyze_module(comp.as_text())
+        want = 2 * 64 * 32 * 32 * 5
+        assert res["dot_flops"] == pytest.approx(want, rel=0.01)
+        assert 5 in res["while_trips"]
+
+    def test_collective_parse_fixture(self):
+        from repro.launch.hlo_analysis import collective_bytes_by_kind
+        hlo = """
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[128,256]{1,0} all-gather(%p0), dimensions={0}
+  ROOT %ar = f32[128,256]{1,0} all-reduce(%ag), to_apply=%sum
+}
+"""
+        out = collective_bytes_by_kind(hlo)
+        assert out["all-gather"] == 128 * 256 * 4
+        assert out["all-reduce"] == 128 * 256 * 4
+        assert out["total"] == 2 * 128 * 256 * 4

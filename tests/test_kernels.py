@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.fdm_stress import fdm_stress
+from repro.kernels.flash_attention import flash_attention, flash_decode
+from repro.kernels.matmul import matmul
+from repro.kernels.ssm_scan import selective_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype=jnp.float32, k=0, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, k), shape)
+            * scale).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [(64, 96, 128), (50, 70, 30),
+                                       (128, 128, 128), (13, 257, 65)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, m, k, n, dtype):
+        x, y = rand((m, k), dtype, 1), rand((k, n), dtype, 2)
+        out = matmul(x, y, block_m=32, block_n=32, block_k=32,
+                     interpret=True)
+        want = ref.matmul_ref(x, y)
+        np.testing.assert_allclose(
+            out.astype(np.float32), want.astype(np.float32), **TOL[dtype])
+
+    @pytest.mark.parametrize("epilogue", ["none", "gelu", "silu", "relu"])
+    def test_fused_epilogue_with_bias(self, epilogue):
+        x, y, b = rand((64, 64), k=1), rand((64, 96), k=2), rand((96,), k=3)
+        out = matmul(x, y, b, epilogue=epilogue, block_m=32, block_n=32,
+                     block_k=32, interpret=True)
+        want = ref.matmul_ref(x, y, b, epilogue)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(bm=st.sampled_from([16, 32, 64]), bn=st.sampled_from([16, 32]),
+           bk=st.sampled_from([16, 32, 64]))
+    def test_property_block_shape_invariance(self, bm, bn, bk):
+        """Block shape is a pure performance parameter — results match the
+        oracle for every tile configuration."""
+        x, y = rand((96, 80), k=4), rand((80, 48), k=5)
+        out = matmul(x, y, block_m=bm, block_n=bn, block_k=bk,
+                     interpret=True)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=2e-5,
+                                   atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("h,hkv", [(8, 8), (8, 2), (4, 1)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_gqa_causal(self, h, hkv, causal):
+        q = rand((2, h, 128, 32), k=1, scale=0.3)
+        kk = rand((2, hkv, 128, 32), k=2, scale=0.3)
+        v = rand((2, hkv, 128, 32), k=3)
+        out = flash_attention(q, kk, v, causal=causal, block_q=64,
+                              block_k=64, interpret=True)
+        want = ref.attention_ref(q, kk, v, causal=causal)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [16, 64])
+    def test_sliding_window(self, window):
+        q = rand((1, 2, 192, 32), k=4, scale=0.3)
+        out = flash_attention(q, q, q, causal=True, window=window,
+                              block_q=64, block_k=64, interpret=True)
+        want = ref.attention_ref(q, q, q, causal=True, window=window)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_nondivisible_seq(self):
+        q = rand((1, 2, 100, 32), k=5, scale=0.3)
+        out = flash_attention(q, q, q, block_q=64, block_k=64,
+                              interpret=True)
+        want = ref.attention_ref(q, q, q)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_matches_chunked_jnp_path(self):
+        """The two long-sequence paths (Pallas kernel, chunked jnp) agree."""
+        q = rand((1, 4, 256, 32), k=6, scale=0.3)
+        a = flash_attention(q, q, q, block_q=64, block_k=64, interpret=True)
+        b = ref.chunked_attention(q, q, q, block_q=64, block_k=64)
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+    def test_decode_ragged_kv_len(self):
+        q = rand((2, 8, 1, 32), k=7, scale=0.4)
+        kk = rand((2, 2, 256, 32), k=8, scale=0.4)
+        v = rand((2, 2, 256, 32), k=9)
+        kv_len = jnp.array([100, 256], jnp.int32)
+        out = flash_decode(q, kk, v, kv_len, block_k=64, interpret=True)
+        want = ref.decode_ref(q, kk, v, kv_len)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+class TestSelectiveScan:
+    @pytest.mark.parametrize("l,chunk", [(96, 32), (90, 32), (64, 64),
+                                         (33, 16)])
+    def test_chunking_invariance(self, l, chunk):
+        bsz, di, n = 2, 16, 8
+        x = rand((bsz, l, di), k=1)
+        dt = jax.nn.softplus(rand((bsz, l, di), k=2))
+        a = -jnp.exp(rand((di, n), k=3))
+        b = rand((bsz, l, n), k=4)
+        c = rand((bsz, l, n), k=5)
+        d = rand((di,), k=6)
+        out = selective_scan(x, dt, a, b, c, d, chunk=chunk, interpret=True)
+        want = ref.selective_scan_ref(x, dt, a, b, c, d)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+class TestFdmStress:
+    @pytest.mark.parametrize("variant", ["fused", "split"])
+    @pytest.mark.parametrize("blocks", [(8, 8, 8), (4, 16, 8)])
+    def test_vs_ref(self, variant, blocks):
+        nx, ny, nz = 12, 10, 16
+        rng = np.random.default_rng(0)
+        arrays = dict(
+            lam=jnp.asarray(rng.normal(size=(nx, ny, nz)), jnp.float32),
+            rig=jnp.asarray(rng.uniform(0.5, 2.0, size=(nx, ny, nz)),
+                            jnp.float32),
+            q=jnp.asarray(rng.normal(size=(nx, ny, nz)), jnp.float32),
+            absx=jnp.asarray(rng.normal(size=nx), jnp.float32),
+            absy=jnp.asarray(rng.normal(size=ny), jnp.float32),
+            absz=jnp.asarray(rng.normal(size=nz), jnp.float32),
+            **{k: jnp.asarray(rng.normal(size=(nx, ny, nz)), jnp.float32)
+               for k in ("dxvx", "dyvy", "dzvz", "dxvy", "dyvx", "dxvz",
+                         "dzvx", "dyvz", "dzvy")})
+        state = {k: jnp.asarray(rng.normal(size=(nx, ny, nz)), jnp.float32)
+                 for k in ("sxx", "syy", "szz", "sxy", "sxz", "syz")}
+        want = ref.fdm_stress_ref(arrays, state, 0.1)
+        bx, by, bz = blocks
+        out = fdm_stress(arrays, state, 0.1, variant=variant, bx=bx, by=by,
+                         bz=bz, interpret=True)
+        for kk in want:
+            np.testing.assert_allclose(out[kk], want[kk], rtol=2e-5,
+                                       atol=2e-5,
+                                       err_msg=f"{variant}:{kk}")

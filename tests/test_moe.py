@@ -1,0 +1,88 @@
+"""MoE routing semantics: capacity, dropping, balance, shared experts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import MoEConfig, apply_moe, capacity, init_moe
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mk(e=4, k=2, cf=1.25, shared=0, group=16, d=32, ff=64):
+    cfg = MoEConfig(d_model=d, d_ff=ff, n_experts=e, top_k=k,
+                    n_shared_experts=shared, capacity_factor=cf,
+                    group_size=group)
+    return cfg, init_moe(KEY, cfg)
+
+
+def test_output_shape_and_finite():
+    cfg, p = mk()
+    x = jax.random.normal(KEY, (2, 24, 32))
+    out, aux = apply_moe(p, x, cfg)
+    assert out.shape == x.shape
+    assert jnp.isfinite(out).all() and jnp.isfinite(aux)
+
+
+def test_ragged_tail_not_dropped():
+    """Tokens beyond the last full group must still get expert outputs
+    (regression: the tail used to be zero-padded away)."""
+    cfg, p = mk(cf=4.0)
+    x = jax.random.normal(KEY, (1, 26, 32)) * 0.5    # 26 % 16 != 0
+    out, _ = apply_moe(p, x, cfg)
+    tail = out[0, 16:]
+    assert float(jnp.abs(tail).max()) > 1e-4   # non-zero expert output
+    # and equals the same tokens processed alone (drop-free capacity)
+    out2, _ = apply_moe(p, x[:, 16:], cfg)
+    np.testing.assert_allclose(np.asarray(out[:, 16:]), np.asarray(out2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_capacity_dropping_happens_when_tight():
+    """With capacity_factor << 1 some tokens must lose expert capacity
+    (their output becomes exactly zero) — the GShard dropped-token
+    behaviour."""
+    cfg, p = mk(cf=0.25, k=1)
+    x = jax.random.normal(KEY, (1, 64, 32))
+    out, _ = apply_moe(p, x, cfg)
+    norms = jnp.linalg.norm(out[0], axis=-1)
+    assert int((norms < 1e-7).sum()) > 0
+
+
+def test_drop_free_at_high_capacity():
+    cfg, p = mk(cf=4.0)
+    x = jax.random.normal(KEY, (1, 32, 32))
+    out, _ = apply_moe(p, x, cfg)
+    norms = jnp.linalg.norm(out[0], axis=-1)
+    assert int((norms < 1e-7).sum()) == 0
+
+
+def test_shared_expert_always_active():
+    cfg0, p0 = mk(cf=0.25, k=1, shared=0)
+    cfg1, p1 = mk(cf=0.25, k=1, shared=1)
+    x = jax.random.normal(KEY, (1, 64, 32))
+    out0, _ = apply_moe(p0, x, cfg0)
+    out1, _ = apply_moe(p1, x, cfg1)
+    n0 = int((jnp.linalg.norm(out0[0], axis=-1) < 1e-7).sum())
+    n1 = int((jnp.linalg.norm(out1[0], axis=-1) < 1e-7).sum())
+    assert n0 > 0 and n1 == 0      # shared expert rescues dropped tokens
+
+
+def test_aux_loss_penalises_imbalance():
+    cfg, p = mk(e=4, k=1, cf=4.0)
+    # force the router toward expert 0
+    p_bad = dict(p)
+    router = np.zeros((32, 4), np.float32)
+    router[:, 0] = 5.0
+    p_bad["router"] = jnp.asarray(router)
+    x = jax.random.normal(KEY, (1, 64, 32))
+    _, aux_bal = apply_moe(p, x, cfg)
+    _, aux_bad = apply_moe(p_bad, x, cfg)
+    assert float(aux_bad) > float(aux_bal)
+
+
+def test_capacity_formula():
+    cfg = MoEConfig(32, 64, n_experts=8, top_k=2, capacity_factor=1.0,
+                    group_size=128)
+    assert capacity(cfg, 128) == 32           # 128*2/8
+    assert capacity(cfg, 4) == 4              # floor at 4

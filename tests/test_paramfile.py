@@ -1,0 +1,105 @@
+"""Parameter information files — the paper's S-expression format (§6.2)."""
+import os
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import paramfile
+from repro.core.paramfile import Node, dumps, loads, param_path
+
+
+def test_paper_install_example_roundtrip():
+    """The printed OAT_InstallParam.dat example (Sample 2)."""
+    text = "(SetCacheParam\n(CacheSize 64)\n(CacheLine 8)\n)\n"
+    nodes = loads(text)
+    assert len(nodes) == 1
+    n = nodes[0]
+    assert n.name == "SetCacheParam"
+    assert n.child_value("CacheSize") == 64
+    assert n.child_value("CacheLine") == 8
+    assert loads(dumps(nodes)) == nodes
+
+
+def test_paper_static_example_nested():
+    """The printed OAT_StaticParam.dat example with nested OAT_PROBSIZE
+    groups (Sample 4a)."""
+    text = """(MyMatMul
+(OAT_NUMPROCS 4)
+(OAT_SAMPDIST 1024)
+(OAT_PROBSIZE 1024
+(MyMatMul_I 4)
+(MyMatMul_J 8))
+(OAT_PROBSIZE 2048
+(MyMatMul_I 4)
+(MyMatMul_J 9) )
+(OAT_PROBSIZE 3072
+(MyMatMul_I 5)
+(MyMatMul_J 10) )
+)
+"""
+    nodes = loads(text)
+    mm = nodes[0]
+    assert mm.child_value("OAT_NUMPROCS") == 4
+    g = mm.keyed_child("OAT_PROBSIZE", 2048)
+    assert g.child_value("MyMatMul_I") == 4
+    assert g.child_value("MyMatMul_J") == 9
+    assert loads(dumps(nodes)) == nodes
+
+
+def test_scalar_kinds():
+    nodes = loads('(X (a 1) (b 2.5) (c .true.) (d .false.) (e "hi"))')
+    x = nodes[0]
+    assert x.child_value("a") == 1
+    assert x.child_value("b") == 2.5
+    assert x.child_value("c") is True
+    assert x.child_value("d") is False
+    assert x.child_value("e") == "hi"
+
+
+def test_file_naming_conventions(tmp_path):
+    """§6.2: OAT_<Phase>Param[Def]<X>.dat."""
+    d = str(tmp_path)
+    assert param_path(d, "install").endswith("OAT_InstallParam.dat")
+    assert param_path(d, "static", "MyMatMul").endswith(
+        "OAT_StaticParamMyMatMul.dat")
+    assert param_path(d, "dynamic", user=True).endswith(
+        "OAT_DynamicParamDef.dat")
+
+
+def test_atomic_save(tmp_path):
+    path = str(tmp_path / "OAT_InstallParam.dat")
+    paramfile.save_file(path, [Node("A", children=[Node("x", 1)])])
+    assert not os.path.exists(path + ".tmp")
+    assert paramfile.load_file(path)[0].child_value("x") == 1
+
+
+_names = st.text(
+    alphabet=st.sampled_from("abcXYZ_123"), min_size=1, max_size=8)
+_scalars = st.one_of(st.integers(-1000, 1000), st.booleans(),
+                     st.text(alphabet=st.sampled_from("abc DEF"),
+                             min_size=1, max_size=6).map(lambda s: s))
+
+
+@st.composite
+def _node(draw, depth=0):
+    name = draw(_names)
+    value = draw(st.none() | _scalars)
+    children = []
+    if depth < 2:
+        children = draw(st.lists(_node(depth=depth + 1), max_size=3))
+    if isinstance(value, str):
+        value = value.strip() or None
+    return Node(name, value, children)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(_node(), min_size=1, max_size=4))
+def test_property_roundtrip(nodes):
+    """Property: dumps -> loads is the identity on arbitrary trees."""
+    def norm(n):
+        v = n.value
+        return Node(n.name, v, [norm(c) for c in n.children])
+
+    nodes = [norm(n) for n in nodes]
+    assert loads(dumps(nodes)) == nodes

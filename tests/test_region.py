@@ -1,0 +1,86 @@
+"""Region model: nesting legality (Tables 1-2), depth, registry."""
+import pytest
+
+from repro.core import (ATRegion, OATNestingError, OATSpecError,
+                        RegionRegistry, Varied)
+
+
+def mk(at_type="static", feature="variable", name="R", **kw):
+    if feature in ("variable", "unroll") and "varied" not in kw:
+        kw["varied"] = Varied("x", 1, 4)
+    return ATRegion(at_type, feature, name, fn=lambda **k: None, **kw)
+
+
+class TestTable1TypeNesting:
+    """install may nest only install; static nests install/static;
+    dynamic nests everything."""
+
+    @pytest.mark.parametrize("outer,inner,ok", [
+        ("install", "install", True), ("install", "static", False),
+        ("install", "dynamic", False), ("static", "install", True),
+        ("static", "static", True), ("static", "dynamic", False),
+        ("dynamic", "install", True), ("dynamic", "static", True),
+        ("dynamic", "dynamic", True),
+    ])
+    def test_pairs(self, outer, inner, ok):
+        o = mk(outer, "variable", "O")
+        i = mk(inner, "variable", "I")
+        if ok:
+            o.add_child(i)
+            assert i.parent is o
+        else:
+            with pytest.raises(OATNestingError):
+                o.add_child(i)
+
+
+class TestTable2FeatureNesting:
+    """unroll may nest nothing; define/variable/select nest everything."""
+
+    @pytest.mark.parametrize("outer", ["define", "variable", "select"])
+    @pytest.mark.parametrize("inner", ["define", "variable", "select",
+                                       "unroll"])
+    def test_permissive(self, outer, inner):
+        mk("static", outer, "O").add_child(mk("static", inner, "I"))
+
+    @pytest.mark.parametrize("inner", ["define", "variable", "select",
+                                       "unroll"])
+    def test_unroll_nests_nothing(self, inner):
+        with pytest.raises(OATNestingError):
+            mk("static", "unroll", "O").add_child(mk("static", inner, "I"))
+
+
+def test_max_depth_three():
+    a = mk(name="A")
+    b = mk(name="B")
+    c = mk(name="C")
+    d = mk(name="D")
+    a.add_child(b)
+    b.add_child(c)
+    with pytest.raises(OATNestingError):
+        c.add_child(d)
+
+
+def test_varied_required_for_unroll():
+    with pytest.raises(OATSpecError):
+        ATRegion("static", "unroll", "X", fn=lambda: None)
+
+
+def test_qualified_pp_names():
+    r = mk(feature="unroll", name="MyMatMul", varied=Varied(("i", "j"), 1, 4))
+    assert r.pp_names == ("MyMatMul_I", "MyMatMul_J")
+
+
+def test_registry_number_ordering():
+    reg = RegionRegistry()
+    reg.register(mk(name="first"))
+    reg.register(mk(name="second", number=1))
+    reg.register(mk(name="third", number=0))
+    names = [r.name for r in reg.by_phase("static")]
+    assert names == ["third", "second", "first"]
+
+
+def test_registry_duplicate_rejected():
+    reg = RegionRegistry()
+    reg.register(mk(name="X"))
+    with pytest.raises(OATSpecError):
+        reg.register(mk(name="X"))

@@ -1,0 +1,100 @@
+"""Paper Samples 3/4c: user basic parameters with custom sample ranges
+(OAT_BPset / OAT_BPsetName / OAT_BPsetCDF) driving a 2-D BP grid."""
+import pytest
+
+from repro.core import OAT_INSTALL, OAT_STATIC, Varied
+from repro.core import paramfile
+from repro.core.directives import static_unroll
+
+
+def test_sample4c_two_basic_parameters(ctx_with_bps):
+    """Sample 4c: both n and nprocs are BPs; nprocs gets its own
+    STARTTUNESIZE/ENDTUNESIZE/SAMPDIST names; the static sweep covers the
+    (OAT_PROBSIZE x nprocs) product and records optima per point."""
+    ctx = ctx_with_bps
+
+    @static_unroll(ctx, name="MyMatMul", varied=Varied(("i", "j"), 1, 4),
+                   params=["bp n", "bp nprocs"])
+    def my_matmul(i=1, j=1, **bps):
+        return lambda: 0.0
+
+    # the paper's registration sequence (Sample 4c)
+    ctx.OAT_BPset("nprocs")
+    ctx.OAT_BPsetName("STARTTUNESIZE", "nprocs", "OAT_NprocsStartSize")
+    ctx.OAT_BPsetName("ENDTUNESIZE", "nprocs", "OAT_NprocsEndSize")
+    ctx.OAT_BPsetName("SAMPDIST", "nprocs", "OAT_NprocsSampDist")
+    ctx.store.set_bp("OAT_NprocsStartSize", 1)
+    ctx.store.set_bp("OAT_NprocsEndSize", 4)
+    ctx.store.set_bp("OAT_NprocsSampDist", 1)
+
+    # cost depends on BOTH BPs: optimum i tracks probsize, j tracks nprocs
+    def factory(region, bp_env):
+        def measure(asg):
+            ti = bp_env["OAT_PROBSIZE"] // 1024
+            tj = bp_env["nprocs"]
+            return (asg["MyMatMul_I"] - ti) ** 2 \
+                + (asg["MyMatMul_J"] - tj) ** 2
+        return measure
+
+    ctx._executor_factory = factory
+    ctx.phase_ran["install"] = True
+    ctx.OAT_ATexec(OAT_STATIC, ["MyMatMul"])
+
+    nodes = paramfile.load_file(paramfile.param_path(ctx.workdir, "static"))
+    mm = next(n for n in nodes if n.name == "MyMatMul")
+    # 3 probsize points x 4 nprocs points = 12 records
+    groups = [g for g in mm.children if g.name == "OAT_PROBSIZE"]
+    assert len(groups) == 12
+    for g in groups:
+        assert g.child_value("MyMatMul_I") == int(g.value) // 1024
+        assert g.child_value("MyMatMul_J") == g.child_value("nprocs")
+
+
+def test_bpset_cdf_controls_interpolation(ctx_with_bps):
+    """OAT_BPsetCDF: the non-sample-point inference method is selectable."""
+    ctx = ctx_with_bps
+
+    @static_unroll(ctx, name="K", varied=Varied(("u",), 1, 8),
+                   params=["bp n"])
+    def k(u=1, **bps):
+        return lambda: 0.0
+
+    def factory(region, bp_env):
+        return lambda asg: (asg["K_U"] - bp_env["OAT_PROBSIZE"] // 1024) ** 2
+
+    ctx._executor_factory = factory
+    ctx.phase_ran["install"] = True
+    ctx.OAT_ATexec(OAT_STATIC, ["K"])
+
+    ctx.OAT_BPsetCDF("n", "least-squares 1")
+    v_ls = ctx.static_pp("K", "K_U", 2560)
+    assert v_ls in (2, 3)                    # linear interpolation
+    ctx.bp_specs["n"].cdf = "dspline"
+    v_ds = ctx.static_pp("K", "K_U", 2560)
+    assert v_ds in (2, 3)
+
+
+def test_bpsetname_unknown_kind_rejected(ctx):
+    from repro.core import OATSpecError
+    with pytest.raises(OATSpecError):
+        ctx.OAT_BPsetName("BOGUS", "n", "X")
+
+
+def test_nested_region_extraction():
+    """dsl.extract_regions: nested region start/end pairs are balanced."""
+    from repro.core.codegen import extract_regions
+    src = """#OAT$ static variable region start
+#OAT$ name Outer
+for i in range(N):
+    #OAT$ static unroll region start
+    #OAT$ name Inner
+    for j in range(M):
+        A[i, j] = 0.0
+    #OAT$ static unroll region end
+    B[i] = 1.0
+#OAT$ static variable region end
+"""
+    lines, regions = extract_regions(src)
+    assert [r.name for r in regions] == ["Outer"]
+    body = "\n".join(regions[0].body_lines)
+    assert "Inner" in body          # inner region stays inside the outer

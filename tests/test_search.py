@@ -1,0 +1,137 @@
+"""Paper §6.4.2 search semantics — Sample 10 counts reproduced exactly."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ATRegion, CountingExecutor, Fitting, SearchPlan,
+                        Varied, predicted_count)
+
+
+def build_sample10(outer_search, inner_search):
+    """Sample 10: ABlockRoutine(BL 1..16) nesting Kernel1(i,j 1..32) and
+    Kernel2(l,m 1..32)."""
+    root = ATRegion("static", "variable", "ABlockRoutine",
+                    fn=lambda **kw: None, varied=Varied("BL", 1, 16),
+                    search=outer_search)
+    root.add_child(ATRegion("static", "unroll", "Kernel1",
+                            fn=lambda **kw: None,
+                            varied=Varied(("i", "j"), 1, 32),
+                            search=inner_search))
+    root.add_child(ATRegion("static", "unroll", "Kernel2",
+                            fn=lambda **kw: None,
+                            varied=Varied(("l", "m"), 1, 32),
+                            search=inner_search))
+    return root
+
+
+class TestSample10Counts:
+    """The paper's four worked cases.  Note: the paper prints '1,677,216'
+    for case 1 — an arithmetic typo; 16 * 32**4 = 16,777,216 (asserted)."""
+
+    def test_all_exhaustive(self):
+        n = predicted_count(build_sample10("brute-force", "brute-force"))
+        assert n == 16 * 32 ** 4 == 16_777_216
+
+    def test_all_adhoc(self):
+        assert predicted_count(build_sample10("ad-hoc", "ad-hoc")) == 144
+
+    def test_exhaustive_outer_adhoc_inner(self):
+        assert predicted_count(
+            build_sample10("brute-force", "ad-hoc")) == 144
+
+    def test_adhoc_outer_exhaustive_inner(self):
+        assert predicted_count(
+            build_sample10("ad-hoc", "brute-force")) == 2_064
+
+
+SEP_OPT = {"ABlockRoutine_BL": 5, "Kernel1_I": 3, "Kernel1_J": 7,
+           "Kernel2_L": 2, "Kernel2_M": 9}
+
+
+def separable_cost(asg):
+    return sum((asg[k] - v) ** 2 for k, v in SEP_OPT.items())
+
+
+@pytest.mark.parametrize("outer,inner,count", [
+    ("ad-hoc", "ad-hoc", 144),
+    ("brute-force", "ad-hoc", 144),
+    ("ad-hoc", "brute-force", 2064),
+])
+def test_sample10_actual_runs(outer, inner, count):
+    """The executed trajectory has exactly the predicted length and finds
+    the optimum of a separable cost."""
+    ex = CountingExecutor(separable_cost)
+    res = SearchPlan(build_sample10(outer, inner)).run(ex)
+    assert ex.count == count == res.n_evaluations
+    assert res.best == SEP_OPT
+
+
+def test_small_exhaustive_actual_run():
+    root = ATRegion("static", "unroll", "K",
+                    fn=lambda **kw: None, varied=Varied(("i", "j"), 1, 4))
+    ex = CountingExecutor(
+        lambda a: (a["K_I"] - 2) ** 2 + (a["K_J"] - 3) ** 2)
+    res = SearchPlan(root).run(ex)
+    assert ex.count == 16 == res.n_evaluations    # joint 4x4
+    assert res.best == {"K_I": 2, "K_J": 3}
+
+
+def test_adhoc_nonseparable_is_coordinate_descent():
+    """AD-HOC does one coordinate pass, not a joint search (paper: sum N)."""
+    root = ATRegion("static", "unroll", "K", fn=lambda **kw: None,
+                    varied=Varied(("i", "j"), 1, 8), search="ad-hoc")
+    ex = CountingExecutor(lambda a: (a["K_I"] - a["K_J"]) ** 2
+                          + 0.1 * (a["K_I"] - 5) ** 2)
+    res = SearchPlan(root).run(ex)
+    assert ex.count == 16      # 8 + 8
+
+
+def test_fitting_search_sample1():
+    """Sample 1: least-squares order 5, sampled (1-5, 8, 16) — only the 7
+    sample points are measured; the optimum is inferred on the full grid."""
+    r = ATRegion("install", "unroll", "MyMatMul", fn=lambda **kw: None,
+                 varied=Varied(("i",), 1, 16),
+                 fitting=Fitting.least_squares(
+                     5, sampled=[1, 2, 3, 4, 5, 8, 16]))
+    ex = CountingExecutor(lambda a: (a["MyMatMul_I"] - 6) ** 2 + 3.0)
+    res = SearchPlan(r).run(ex)
+    assert ex.count == 7
+    assert res.best["MyMatMul_I"] == 6           # 6 was never measured
+    assert res.fitted["MyMatMul_I"] is True
+
+
+def test_default_search_methods():
+    """§6.4.2 defaults: variable/unroll -> exhaustive, select -> AD-HOC."""
+    mk = lambda f, **kw: ATRegion("static", f, f, fn=lambda **k: None, **kw)
+    assert mk("variable", varied=Varied("x", 1, 4)).search_method \
+        == "brute-force"
+    assert mk("unroll", varied=Varied("x", 1, 4)).search_method \
+        == "brute-force"
+    assert mk("select").search_method == "ad-hoc"
+    assert mk("define").search_method is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    outer_n=st.integers(2, 6),
+    inner_dims=st.lists(st.tuples(st.integers(1, 2), st.integers(2, 6)),
+                        min_size=1, max_size=3),
+    outer_search=st.sampled_from(["brute-force", "ad-hoc"]),
+    inner_search=st.sampled_from(["brute-force", "ad-hoc"]))
+def test_property_predicted_equals_actual(outer_n, inner_dims, outer_search,
+                                          inner_search):
+    """Property: predicted_count == executed evaluation count for random
+    region trees and mixed search methods."""
+    root = ATRegion("static", "variable", "Root", fn=lambda **kw: None,
+                    varied=Varied("r", 1, outer_n), search=outer_search)
+    for i, (nd, n) in enumerate(inner_dims):
+        names = tuple(f"p{i}_{j}" for j in range(nd))
+        root.add_child(ATRegion("static", "variable", f"Child{i}",
+                                fn=lambda **kw: None,
+                                varied=Varied(names, 1, n),
+                                search=inner_search))
+    ex = CountingExecutor(lambda a: sum((v - 1) ** 2 for v in a.values()))
+    res = SearchPlan(root).run(ex)
+    assert ex.count == predicted_count(root) == res.n_evaluations
+    # the all-ones optimum is separable: every method must find it
+    assert all(v == 1 for v in res.best.values())

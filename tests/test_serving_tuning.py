@@ -1,0 +1,155 @@
+"""Serving engine + the three FIBER tuning drivers end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import ATContext
+from repro.kernels import ops
+from repro.models import build_model
+from repro.serving import Request, ServingEngine, length_bucket
+from repro.tuning import (analytic_plan_cost, candidate_plans,
+                          register_kernel_regions, run_install_tuning,
+                          tune_layout)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["h2o-danube-1.8b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestServingEngine:
+    def test_completes_requests(self, small_model):
+        cfg, model, params = small_model
+        eng = ServingEngine(model, params, n_lanes=2, max_len=48)
+        for rid in range(3):
+            eng.submit(Request(rid=rid, prompt=[1 + rid, 2, 3],
+                               max_new_tokens=4))
+        done = eng.run(max_steps=40)
+        assert len(done) == 3
+        assert all(len(r.out_tokens) == 4 for r in done)
+
+    def test_continuous_batching_recycles_lanes(self, small_model):
+        cfg, model, params = small_model
+        eng = ServingEngine(model, params, n_lanes=1, max_len=48)
+        for rid in range(2):
+            eng.submit(Request(rid=rid, prompt=[5, 6], max_new_tokens=3))
+        done = eng.run(max_steps=40)
+        assert len(done) == 2          # second request reused the lane
+
+    def test_engine_matches_plain_decode(self, small_model):
+        """Greedy engine output == direct prefill+decode loop (single
+        request) — the batching/lane machinery changes nothing."""
+        cfg, model, params = small_model
+        prompt = [3, 1, 4, 1, 5]
+        eng = ServingEngine(model, params, n_lanes=2, max_len=48)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        out = eng.run(max_steps=30)[0].out_tokens
+
+        logits, caches = model.prefill(params,
+                                       jnp.asarray([prompt], jnp.int32),
+                                       max_len=48)
+        want = [int(jnp.argmax(logits[0]))]
+        pos = len(prompt)
+        for _ in range(4):
+            logits, caches = model.decode_step(
+                params, caches, jnp.asarray([[want[-1]]], jnp.int32),
+                jnp.asarray([pos], jnp.int32))
+            want.append(int(jnp.argmax(logits[0])))
+            pos += 1
+        assert out == want
+
+    def test_length_bucket(self):
+        assert length_bucket(100) == 128
+        assert length_bucket(129) == 512
+        assert length_bucket(10 ** 9) == 32768
+
+
+class TestInstallTuning:
+    def test_analytic_install_pass(self, tmp_path):
+        ctx = ATContext(str(tmp_path))
+        register_kernel_regions(ctx)
+        tuned = run_install_tuning(ctx)
+        assert set(tuned) == {"MatmulBlocks", "FlashBlocks", "SsmChunk"}
+        assert ops.tuned("matmul")["block_m"] in (128, 256, 512)
+        assert ops.tuned("flash_attention")["block_q"] in (128, 256, 512,
+                                                           1024)
+        # results persisted in the FIBER store at install level
+        assert ctx.store.get("MatmulBlocks_BM", "static") is not None
+
+    def test_wallclock_install_pass(self, tmp_path):
+        ctx = ATContext(str(tmp_path))
+        register_kernel_regions(ctx)
+        tuned = run_install_tuning(ctx, wall_clock=True)
+        assert "MatmulBlocks" in tuned
+
+
+class TestStaticTuning:
+    def test_decode_seq_wins_for_low_kv_decode(self, tmp_path):
+        """yi-6b decode (kv=4 < model axis): the seq-sharded KV layout must
+        beat tp-with-weight-gather on the roofline estimate."""
+        c_tp = analytic_plan_cost("yi-6b", "decode_32k", "tp")
+        c_seq = analytic_plan_cost("yi-6b", "decode_32k", "decode_seq")
+        assert c_seq < c_tp
+
+    def test_tp_wins_for_dense_train(self):
+        c_tp = analytic_plan_cost("deepseek-7b", "train_4k", "tp")
+        c_fsdp = analytic_plan_cost("deepseek-7b", "train_4k", "fsdp")
+        assert c_tp != c_fsdp       # the select is meaningful
+
+    def test_tune_layout_picks_min_cost(self, tmp_path):
+        ctx = ATContext(str(tmp_path))
+        costs = {"tp": 3.0, "decode_seq": 1.0,
+                 "decode_resident": 2.0}
+        best = tune_layout(ctx, "yi-6b", "decode_32k",
+                           cost_fn=lambda p: costs[p])
+        assert best == "decode_seq"
+        # recorded in the static param file, keyed by BP (paper format)
+        from repro.core import paramfile
+        nodes = paramfile.load_file(
+            paramfile.param_path(str(tmp_path), "static"))
+        rec = next(n for n in nodes if n.name.startswith("Layout_yi_6b"))
+        g = rec.keyed_child("OAT_PROBSIZE", 32768)
+        assert g is not None
+
+    def test_candidate_plans(self):
+        assert "decode_seq" in candidate_plans("decode")
+        assert "decode_resident" in candidate_plans("decode")
+        assert "fsdp" in candidate_plans("train")
+
+    def test_decode_resident_wins_overall(self):
+        """The §Perf result: resident model-axis weights beat per-token
+        FSDP re-gather for every dense decode cell."""
+        for arch in ("deepseek-7b", "yi-6b"):
+            c_tp = analytic_plan_cost(arch, "decode_32k", "tp")
+            c_res = analytic_plan_cost(arch, "decode_32k",
+                                       "decode_resident")
+            assert c_res < c_tp, arch
+
+
+class TestDynamicTuning:
+    def test_bucket_tuner_commits(self, tmp_path):
+        from repro.tuning import DecodeAutoTuner
+        ctx = ATContext(str(tmp_path))
+        ctx.phase_ran["install"] = ctx.phase_ran["static"] = True
+        calls = []
+
+        def make_decode(bk):
+            def fn():
+                calls.append(bk)
+                return {"bk": bk}
+            return fn
+
+        tuner = DecodeAutoTuner(ctx, make_decode, buckets=(512, 2048),
+                                block_ks=(256, 512))
+        for _ in range(3):
+            tuner.decode(300)
+        committed = tuner.committed()
+        assert committed[512] is not None
+        assert committed[2048] is None     # untouched bucket still tuning
+        out = tuner.decode(300)
+        assert out["bk"] in (256, 512)
