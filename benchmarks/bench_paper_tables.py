@@ -24,7 +24,7 @@ from repro.core.codegen import OATCodeGen
 
 
 def bench_sample10_counts() -> list[tuple[str, float, str]]:
-    from tests.test_codegen import fdm_stress  # noqa: F401  (layout only)
+    from tests.fdm_sample import fdm_stress  # noqa: F401  (layout only)
 
     def build(outer, inner):
         root = ATRegion("static", "variable", "ABlockRoutine",
@@ -56,7 +56,7 @@ def bench_sample10_counts() -> list[tuple[str, float, str]]:
 
 
 def bench_sample8_codegen() -> list[tuple[str, float, str]]:
-    import tests.test_codegen as tc
+    import tests.fdm_sample as tc
     gen = OATCodeGen("/tmp/bench_oat")
     t0 = time.perf_counter()
     variants = gen.generate(tc.fdm_stress)["FDMStress"]

@@ -1,11 +1,14 @@
 """Paper §5 Sample 8 end-to-end: auto-tune the ppOpen-APPL/FDM stress
-kernel's 8 loop-split/fusion variants — at BOTH levels of the stack.
+kernel's 8 loop-split/fusion variants — at BOTH levels of the stack,
+entirely through the ``repro.at`` session API.
 
     PYTHONPATH=src python examples/autotune_fdm.py
 
 Level 1 (the paper, literally): the annotated Python loop nest is expanded
-by OATCodeGen into the 8 candidates, each wall-clock measured, and the
-winner committed through an install-time select region.
+by ``AutoTuner.preprocess`` into the 8 candidates, each wall-clock
+measured through a named executor backend, and the winner committed
+through an install-time select region (then persisted in the session's
+record store).
 
 Level 2 (the TPU adaptation): the same kernel as a Pallas pallas_call with
 the fused-vs-split trade-off (SplitPointCopyDef == rematerialisation of the
@@ -22,22 +25,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ATContext, OAT_INSTALL
-from repro.core.dsl import preprocess
+import repro.at as at
 from repro.kernels import ref
 from repro.kernels.fdm_stress import fdm_stress
 
 
 def main():
-    from test_codegen import _fdm_inputs, fdm_stress as fdm_loops
+    from fdm_sample import _fdm_inputs, fdm_stress as fdm_loops
 
     workdir = tempfile.mkdtemp(prefix="oat_fdm_")
-    ctx = ATContext(workdir)
-    for k, v in (("OAT_NUMPROCS", 1), ("OAT_STARTTUNESIZE", 8),
-                 ("OAT_ENDTUNESIZE", 8), ("OAT_SAMPDIST", 8)):
-        ctx.store.set_bp(k, v)
+    tuner = at.AutoTuner(workdir, executor="fdm-wallclock")
+    tuner.set_bps(numprocs=1, start=8, end=8, dist=8)
 
-    regions = preprocess(fdm_loops, ctx, workdir)
+    regions = tuner.preprocess(fdm_loops)
     region = regions["FDMStress"]
     print(f"Sample 8 candidates ({len(region.subregions)}):")
     for i, sub in enumerate(region.subregions, 1):
@@ -47,7 +47,8 @@ def main():
     n = 10
     arrs, state = _fdm_inputs(n=n)
 
-    def executor(region, bp_env):
+    @at.executors.register("fdm-wallclock")
+    def fdm_executor(region, bp_env):
         def measure(asg):
             idx = asg["FDMStress_SELECT"]
             st = {k: v.copy() for k, v in state.items()}
@@ -56,11 +57,12 @@ def main():
             return time.perf_counter() - t0
         return measure
 
-    ctx._executor_factory = executor
-    ctx.OAT_ATexec(OAT_INSTALL, ["FDMStress"])
-    best = ctx.store.entry("FDMStress_SELECT").value
+    tuner.run("install", ["FDMStress"])
+    best = int(tuner.best("FDMStress")["FDMStress_SELECT"])
     print(f"install-time winner: #{best + 1} "
-          f"({region.subregions[best].name})\n")
+          f"({region.subregions[best].name})")
+    print(f"({tuner.executor_calls} variants measured; winner persisted in "
+          f"{at.ATRecordStore(workdir).path})\n")
 
     # ---- level 2: the Pallas kernel variants --------------------------
     rng = np.random.default_rng(0)

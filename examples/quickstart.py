@@ -1,22 +1,26 @@
-"""Quickstart: the complete ppOpen-AT flow on a real kernel in ~60 lines.
+"""Quickstart: the complete ppOpen-AT flow on a real kernel in ~60 lines,
+entirely through the ``repro.at`` session API.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. annotate a matmul with #OAT$ directives (paper Sample 1/4 style);
-2. OATCodeGen expands it into unrolled variants under ./OAT/;
-3. OAT_ATexec(OAT_INSTALL) searches the (i, j) unroll space;
-4. the tuned variant runs, numerically identical to the baseline.
+2. ``AutoTuner.preprocess`` expands it into unrolled variants under ./OAT/;
+3. ``AutoTuner.run("install")`` searches the (i, j) unroll space with a
+   custom executor registered by name in ``at.executors``;
+4. the tuned variant runs, numerically identical to the baseline;
+5. a SECOND session pointed at the same workdir warm-loads the optimum
+   from the persistent record store — zero measurements.
 """
 import os
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import ATContext, OAT_INSTALL
-from repro.core.dsl import preprocess
+import repro.at as at
 
 
 def matmul_kernel(N, A, B, C):
@@ -32,47 +36,56 @@ def matmul_kernel(N, A, B, C):
     return A
 
 
+n = 16
+rng = np.random.default_rng(0)
+b, c = rng.normal(size=(n, n)), rng.normal(size=(n, n))
+
+
+@at.executors.register("unrolled-matmul")
+def measure_variant(region, bp_env):
+    """Wall-clock one unrolled variant on a 16x16 matmul."""
+    def measure(asg):
+        variant = region.fn(i=asg["MyMatMul_I"], j=asg["MyMatMul_J"])
+        a = np.zeros((n, n))
+        t0 = time.perf_counter()
+        variant(n, a, b, c)
+        return time.perf_counter() - t0
+    return measure
+
+
+def make_session(workdir):
+    tuner = at.AutoTuner(workdir, executor="unrolled-matmul")
+    tuner.set_bps(numprocs=1, start=16, end=16, dist=16)
+    regions = tuner.preprocess(matmul_kernel)
+    return tuner, regions
+
+
 def main():
     workdir = tempfile.mkdtemp(prefix="oat_quickstart_")
-    ctx = ATContext(workdir)
-    for k, v in (("OAT_NUMPROCS", 1), ("OAT_STARTTUNESIZE", 16),
-                 ("OAT_ENDTUNESIZE", 16), ("OAT_SAMPDIST", 16)):
-        ctx.store.set_bp(k, v)
-
-    regions = preprocess(matmul_kernel, ctx, workdir)
+    tuner, regions = make_session(workdir)
     print(f"registered regions: {list(regions)}")
     print(f"generated code: {workdir}/OAT/OAT_matmul_kernel.py")
 
-    # measure real wall-clock of each unrolled variant on a 16x16 matmul
-    rng = np.random.default_rng(0)
-    n = 16
-    b, c = rng.normal(size=(n, n)), rng.normal(size=(n, n))
-    region = regions["MyMatMul"]
-
-    import time
-
-    def executor(region, bp_env):
-        def measure(asg):
-            fi, fj = asg["MyMatMul_I"], asg["MyMatMul_J"]
-            variant = region.fn(i=fi, j=fj)
-            a = np.zeros((n, n))
-            t0 = time.perf_counter()
-            variant(n, a, b, c)
-            return time.perf_counter() - t0
-        return measure
-
-    ctx._executor_factory = executor
-    ctx.OAT_ATexec(OAT_INSTALL, ["MyMatMul"])
-    besti = ctx.store.entry("MyMatMul_I").value
-    bestj = ctx.store.entry("MyMatMul_J").value
+    tuner.run("install", ["MyMatMul"])
+    best = tuner.best("MyMatMul")
+    besti, bestj = best["MyMatMul_I"], best["MyMatMul_J"]
     print(f"tuned unroll factors: i={besti} j={bestj} "
-          f"(searched {ctx.search_log['MyMatMul']} variants, AD-HOC)")
+          f"(searched {tuner.executor_calls} variants, AD-HOC)")
 
     a = np.zeros((n, n))
-    region.fn(i=besti, j=bestj)(n, a, b, c)
+    regions["MyMatMul"].fn(i=besti, j=bestj)(n, a, b, c)
     np.testing.assert_allclose(a, b @ c, rtol=1e-10)
     print("tuned variant matches numpy matmul — OK")
     print(open(os.path.join(workdir, "OAT_InstallParam.dat")).read())
+
+    # the tuning database makes the result durable: a fresh session on the
+    # same workdir loads the optimum without re-timing anything
+    tuner2, _ = make_session(workdir)
+    tuner2.run("install", ["MyMatMul"])
+    assert tuner2.executor_calls == 0, "warm path must not re-measure"
+    assert tuner2.best("MyMatMul") == best
+    print(f"second session: warm-loaded i={besti} j={bestj} from "
+          f"{at.ATRecordStore(workdir).path} with 0 measurements — OK")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,57 @@
+"""``repro.at`` — the public auto-tuning API (one frontend, paper-faithful).
+
+The paper's single ``!OAT$`` directive surface, reproduced as one session
+object instead of four parallel frontends:
+
+* :class:`AutoTuner` — the session: declare regions with the
+  :meth:`~repro.at.session.AutoTuner.autotune` decorator (or the comment
+  DSL via :meth:`~repro.at.session.AutoTuner.preprocess`), run phases with
+  :meth:`~repro.at.session.AutoTuner.run`, invoke regions with
+  :meth:`~repro.at.session.AutoTuner.execute`.
+* :func:`tuned` — what kernels call to pick up tuned PPs (replaces the
+  ``ops.set_tuned`` side-channel).
+* :data:`searchers` / :data:`executors` — pluggable backend registries;
+  new strategies register by name instead of editing the runtime.
+* :class:`ATRecordStore` — the persistent tuning database (JSON-lines
+  under the workdir, keyed by machine fingerprint + region + BP point);
+  install/static optima survive process restarts and are warm-loaded
+  without re-timing.
+
+Phase constants (``INSTALL``/``STATIC``/``DYNAMIC``/``ALL``) and the
+declaration vocabulary (:class:`Varied`, :class:`Fitting`,
+:class:`According`, :class:`ParamDecl`) are re-exported so application
+code needs no ``repro.core`` imports.
+"""
+from ..core.cost import According
+from ..core.params import ParamDecl, Varied
+from ..core.region import ATRegion, Fitting
+from ..core.runtime import (OAT_ALL, OAT_DYNAMIC, OAT_INSTALL, OAT_STATIC)
+from .backends import BackendRegistry, executors, searchers
+from .records import ATRecordStore, TuningRecord, machine_fingerprint
+from .session import (AutoTuner, SelectHandle, TunedRegion, clear_published,
+                      current_session, publish, publish_for_bp, tuned,
+                      use_session)
+
+# friendlier aliases for the paper's §6.1 constants
+ALL = OAT_ALL
+INSTALL = OAT_INSTALL
+STATIC = OAT_STATIC
+DYNAMIC = OAT_DYNAMIC
+
+
+def autotune(*args, **kwargs):
+    """Module-level :meth:`AutoTuner.autotune` against the current session
+    (creating a default session in the cwd if none is active)."""
+    session = current_session() or AutoTuner()
+    return session.autotune(*args, **kwargs)
+
+
+__all__ = [
+    "ALL", "INSTALL", "STATIC", "DYNAMIC",
+    "OAT_ALL", "OAT_INSTALL", "OAT_STATIC", "OAT_DYNAMIC",
+    "ATRecordStore", "ATRegion", "According", "AutoTuner",
+    "BackendRegistry", "Fitting", "ParamDecl", "SelectHandle",
+    "TunedRegion", "TuningRecord", "Varied", "autotune", "clear_published",
+    "current_session", "executors", "machine_fingerprint", "publish",
+    "publish_for_bp", "searchers", "tuned", "use_session",
+]

@@ -1,0 +1,160 @@
+"""Persistent tuning database — the ``ATRecordStore``.
+
+The paper pays tuning cost at install/static time and amortises it over
+every later run; this module makes that durable across *processes*: every
+tuned optimum is appended to a JSON-lines file under the session workdir,
+keyed by
+
+    (machine fingerprint, phase, region name, canonical BP point)
+
+so a fresh :class:`~repro.at.session.AutoTuner` pointed at the same workdir
+reloads install/static optima without re-timing anything (the warm path).
+The paper's human-readable ``OAT_*Param.dat`` S-expression files are still
+written by the runtime for fidelity; this store is the machine-queryable
+index over the same results.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass, field
+from typing import Any, Iterator
+
+RECORDS_FILENAME = "OAT_Records.jsonl"
+
+_fingerprint_cache: str | None = None
+
+
+def machine_fingerprint() -> str:
+    """A stable id for 'this machine' as the tuner sees it.
+
+    Install-time PPs depend only on the hardware (paper §3.1), so records
+    are scoped by platform + accelerator backend + device kind + host
+    parallelism: a record tuned on one fingerprint is never served to
+    another.
+    """
+    global _fingerprint_cache
+    if _fingerprint_cache is not None:
+        return _fingerprint_cache
+    import platform
+
+    parts = [platform.system().lower(), platform.machine()]
+    try:
+        import jax
+
+        parts.append(jax.default_backend())
+        devs = jax.devices()
+        if devs:
+            parts.append(getattr(devs[0], "device_kind", "unknown")
+                         .replace(" ", "-").lower())
+        parts.append(f"n{len(devs)}")
+    except Exception:
+        parts.append("nojax")
+    _fingerprint_cache = "-".join(p for p in parts if p)
+    return _fingerprint_cache
+
+
+def _jsonable(v: Any) -> Any:
+    """Coerce numpy scalars etc. to plain JSON types."""
+    if isinstance(v, (str, bool)) or v is None:
+        return v
+    if isinstance(v, int):
+        return v
+    if isinstance(v, float):
+        return v
+    if hasattr(v, "item"):           # numpy scalar
+        return v.item()
+    return str(v)
+
+
+def bp_key(bp: dict[str, Any] | None) -> tuple:
+    """Canonical, hashable form of a BP point."""
+    if not bp:
+        return ()
+    return tuple(sorted((str(k), _jsonable(v)) for k, v in bp.items()))
+
+
+@dataclass
+class TuningRecord:
+    """One tuned optimum: the PP assignment for a (machine, region, BP)."""
+
+    machine: str
+    phase: str                        # install | static | dynamic
+    region: str
+    bp: dict[str, Any] = field(default_factory=dict)
+    pp: dict[str, Any] = field(default_factory=dict)
+    cost: float | None = None
+    n_evaluations: int | None = None
+
+    @property
+    def key(self) -> tuple:
+        return (self.machine, self.phase, self.region, bp_key(self.bp))
+
+
+class ATRecordStore:
+    """JSON-lines tuning database under ``workdir``.
+
+    Append-only on disk (one JSON object per line; last record for a key
+    wins on load), fully indexed in memory.  ``machine`` defaults to the
+    live fingerprint; tests may pin it to simulate foreign machines.
+    """
+
+    def __init__(self, workdir: str = ".", machine: str | None = None):
+        self.workdir = workdir
+        self.machine = machine or machine_fingerprint()
+        self.path = os.path.join(workdir, RECORDS_FILENAME)
+        self._index: dict[tuple, TuningRecord] = {}
+        self._load()
+
+    # ------------------------------------------------------------------
+    def _load(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        with open(self.path, "r") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    d = json.loads(line)
+                    rec = TuningRecord(**d)
+                except (json.JSONDecodeError, TypeError):
+                    continue             # skip corrupt lines, keep the rest
+                self._index[rec.key] = rec
+
+    def put(self, phase: str, region: str, bp: dict[str, Any] | None,
+            pp: dict[str, Any], cost: float | None = None,
+            n_evaluations: int | None = None) -> TuningRecord:
+        rec = TuningRecord(
+            machine=self.machine, phase=phase, region=region,
+            bp={str(k): _jsonable(v) for k, v in (bp or {}).items()},
+            pp={str(k): _jsonable(v) for k, v in pp.items()},
+            cost=None if cost is None else float(cost),
+            n_evaluations=n_evaluations)
+        self._index[rec.key] = rec
+        os.makedirs(self.workdir or ".", exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(asdict(rec)) + "\n")
+        return rec
+
+    def lookup(self, phase: str, region: str,
+               bp: dict[str, Any] | None = None) -> TuningRecord | None:
+        return self._index.get((self.machine, phase, region, bp_key(bp)))
+
+    def lookup_all(self, phase: str, region: str) -> list[TuningRecord]:
+        return [r for r in self._index.values()
+                if r.machine == self.machine and r.phase == phase
+                and r.region == region]
+
+    def records(self) -> Iterator[TuningRecord]:
+        return iter(self._index.values())
+
+    def regions(self, phase: str) -> list[str]:
+        return sorted({r.region for r in self._index.values()
+                       if r.machine == self.machine and r.phase == phase})
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._index

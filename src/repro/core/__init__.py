@@ -1,6 +1,35 @@
 """ppOpen-AT core — the paper's contribution, adapted to Python/JAX.
 
-Public API re-exports.
+Module map (application code should import ``repro.at`` instead — this
+package is the engine underneath it):
+
+===============  ==========================================================
+module           role
+===============  ==========================================================
+``region``       AT region model (§3.4): types/features, nesting legality
+                 (Tables 1-2), the ``RegionRegistry``
+``params``       BP/PP parameter store + FIBER visibility hierarchy
+                 (Fig. 4), ``Varied`` ranges, reserved words (§6.1)
+``runtime``      ``ATContext`` — ``OAT_ATexec`` and the §4 API: phase
+                 priority, BP sweeps, run-time candidate selection;
+                 pluggable ``searcher`` / ``executor_factory`` hooks the
+                 ``repro.at`` backend registries plug into
+``search``       §6.4.2 search composition (Sample 10 counts exactly)
+``fitting``      §3.4.3 fitting: least-squares / d-Spline / user-defined
+``cost``         ``according`` clauses: min/condition/estimated + roofline
+``executor``     measurement backends: wall-clock / cost-model / table
+``paramfile``    the S-expression parameter files (§4.2.1, §6.2)
+``dsl``          ``#OAT$`` comment-directive parsing (the paper surface)
+``codegen``      §5 loop transforms: split/fusion/collapse/unroll variants
+``directives``   DEPRECATED decorator frontend — thin shims over
+                 ``region()`` kept for compatibility; use
+                 ``repro.at.AutoTuner.autotune`` (docs/API.md)
+``stagegraph``   stage-graph execution planning over tuned regions
+``errors``       the ``OAT*Error`` hierarchy
+===============  ==========================================================
+
+Layered on top (not imported here): ``repro.at`` — the public session API
+(AutoTuner, backend registries, the persistent ``ATRecordStore``).
 """
 from .cost import According, RooflineTerms, roofline_seconds, roofline_terms
 from .directives import (SelectRegion, dynamic_select, dynamic_unroll,

@@ -1,31 +1,40 @@
-"""Pythonic directive frontend — the JAX-side `!OAT$` analogue.
+"""Legacy directive frontend — superseded by the ``repro.at`` session API.
 
-Two ways to annotate code:
+.. deprecated::
+    The per-(type, feature) decorators (``install_unroll`` ...) and the
+    ``SelectRegion`` builder are deprecation shims kept so existing code
+    and tests run unchanged.  New code declares regions through one
+    surface: ``repro.at.AutoTuner.autotune`` (see ``docs/API.md`` for the
+    migration table).  The low-level :func:`region` decorator remains the
+    shared implementation both frontends dispatch through, so shimmed and
+    new declarations land in the same registry and are tuned identically.
 
-1. **Decorator / object API** (this module) — first-class in the JAX
-   framework: regions wrap *variant generators* (callables taking PPs as
-   keyword arguments).
-2. **Literal comment directives** (`#OAT$ ...`, dsl.py) — parsed out of
-   Python source and expanded by codegen.py, mirroring the paper's
-   preprocessor flow exactly.
+Example (paper Sample Program 1, current surface)::
 
-Example (paper Sample Program 1)::
-
-    ctx = ATContext(workdir)
-    @install_unroll(ctx, name="MyMatMul", varied=Varied(("i", "j"), 1, 16),
-                    fitting=Fitting.least_squares(5, sampled=[1,2,3,4,5,8,16]),
-                    debug=("pp",))
+    import repro.at as at
+    tuner = at.AutoTuner(workdir)
+    @tuner.autotune("install", "unroll", name="MyMatMul",
+                    varied=at.Varied(("i", "j"), 1, 16),
+                    fitting=at.Fitting.least_squares(5,
+                        sampled=[1, 2, 3, 4, 5, 8, 16]))
     def my_matmul(i=1, j=1):
         return lambda: run_matmul(unroll_i=i, unroll_j=j)
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Sequence
 
 from .cost import According
 from .params import ParamDecl, Varied
 from .region import ATRegion, Fitting, Subregion
 from .runtime import ATContext, default_context
+
+
+def _warn_deprecated(old: str, new: str, stacklevel: int = 3) -> None:
+    warnings.warn(
+        f"repro.core.directives.{old} is deprecated; use {new} "
+        f"(repro.at session API)", DeprecationWarning, stacklevel=stacklevel)
 
 
 def _coerce_params(params) -> list[ParamDecl]:
@@ -73,37 +82,48 @@ def region(ctx: ATContext | None, at_type: str, feature: str, name: str, *,
     return deco
 
 
-# convenience wrappers, one per (type, feature) pair used in the paper
+# deprecation shims, one per (type, feature) pair used in the paper; each
+# dispatches through region() into the same registry the session API uses
+def _shim(at_type: str, feature: str, ctx, kw) -> Callable:
+    # stacklevel 4: user -> wrapper (install_unroll) -> _shim -> warn
+    _warn_deprecated(f"{at_type}_{feature}",
+                     f"AutoTuner.autotune({at_type!r}, {feature!r}, ...)",
+                     stacklevel=4)
+    return region(ctx, at_type, feature, kw.pop("name"), **kw)
+
+
 def install_unroll(ctx=None, **kw):  # Sample 1
-    return region(ctx, "install", "unroll", kw.pop("name"), **kw)
+    return _shim("install", "unroll", ctx, kw)
 
 
 def install_define(ctx=None, **kw):  # Sample 2
-    return region(ctx, "install", "define", kw.pop("name"), **kw)
+    return _shim("install", "define", ctx, kw)
 
 
 def install_variable(ctx=None, **kw):
-    return region(ctx, "install", "variable", kw.pop("name"), **kw)
+    return _shim("install", "variable", ctx, kw)
 
 
 def static_unroll(ctx=None, **kw):   # Sample 4
-    return region(ctx, "static", "unroll", kw.pop("name"), **kw)
+    return _shim("static", "unroll", ctx, kw)
 
 
 def static_variable(ctx=None, **kw):
-    return region(ctx, "static", "variable", kw.pop("name"), **kw)
+    return _shim("static", "variable", ctx, kw)
 
 
 def dynamic_variable(ctx=None, **kw):
-    return region(ctx, "dynamic", "variable", kw.pop("name"), **kw)
+    return _shim("dynamic", "variable", ctx, kw)
 
 
 def dynamic_unroll(ctx=None, **kw):  # Sample 7
-    return region(ctx, "dynamic", "unroll", kw.pop("name"), **kw)
+    return _shim("dynamic", "unroll", ctx, kw)
 
 
 class SelectRegion:
-    """Builder for ``select`` regions (Samples 5 and 6)::
+    """Deprecated builder for ``select`` regions (Samples 5 and 6) — use
+    ``AutoTuner.autotune(phase, "select", name=...)`` instead, which needs
+    no ``finalize`` step.  Original usage::
 
         sel = SelectRegion(ctx, "dynamic", name="PrecondSelect",
                            params=["in eps", "in iter"],
@@ -122,6 +142,8 @@ class SelectRegion:
                  params: Sequence = (), according: According | str | None = None,
                  search: str | None = None, number: int | None = None,
                  parent: ATRegion | None = None, metadata: dict | None = None):
+        _warn_deprecated("SelectRegion",
+                         "AutoTuner.autotune(phase, 'select', name=...)")
         self.ctx = ctx or default_context()
         if isinstance(according, str):
             according = According.parse(according)
@@ -161,12 +183,27 @@ class SelectRegion:
 
 
 def static_select(ctx=None, **kw) -> SelectRegion:
-    return SelectRegion(ctx, "static", kw.pop("name"), **kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sel = SelectRegion(ctx, "static", kw.pop("name"), **kw)
+    _warn_deprecated("static_select",
+                     "AutoTuner.autotune('static', 'select', name=...)")
+    return sel
 
 
 def dynamic_select(ctx=None, **kw) -> SelectRegion:
-    return SelectRegion(ctx, "dynamic", kw.pop("name"), **kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sel = SelectRegion(ctx, "dynamic", kw.pop("name"), **kw)
+    _warn_deprecated("dynamic_select",
+                     "AutoTuner.autotune('dynamic', 'select', name=...)")
+    return sel
 
 
 def install_select(ctx=None, **kw) -> SelectRegion:
-    return SelectRegion(ctx, "install", kw.pop("name"), **kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sel = SelectRegion(ctx, "install", kw.pop("name"), **kw)
+    _warn_deprecated("install_select",
+                     "AutoTuner.autotune('install', 'select', name=...)")
+    return sel

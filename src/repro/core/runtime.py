@@ -98,6 +98,10 @@ class ATContext:
         # executor_factory(region, bp_env) -> measure(assignment)->cost;
         # default: wall-clock over the region's variant generator.
         self._executor_factory = executor_factory or self._default_executor
+        # searcher(plan, measure, init) -> SearchResult; None keeps the
+        # paper's per-region method composition (SearchPlan.run).  The
+        # repro.at session sets this from its `searchers` registry.
+        self.searcher: Callable | None = None
 
     # ------------------------------------------------------------------
     # registration (decorators in directives.py call these)
@@ -286,7 +290,10 @@ class ATContext:
                 return {region.pp_names[0]: best}
 
             measure = self._executor_factory(region, bp_env)
-            res = plan.run(measure, init=colliding or None)
+            if self.searcher is not None:
+                res = self.searcher(plan, measure, init=colliding or None)
+            else:
+                res = plan.run(measure, init=colliding or None)
             self.search_log[region.name] = res.n_evaluations
             best = dict(res.best)
             best.update(colliding)           # pins always win
@@ -366,7 +373,10 @@ class ATContext:
                     self.store.set_pp(k, v, "static")
             nodes.append(rec)
         path = paramfile.param_path(self.workdir, "static")
-        paramfile.save_file(path, nodes)
+        existing = {n.name: n for n in paramfile.load_file(path)}
+        for n in nodes:
+            existing[n.name] = n
+        paramfile.save_file(path, list(existing.values()))
 
     def static_pp(self, region_name: str, pp: str, probsize: int,
                   reader_phase: str = "dynamic") -> Any:

@@ -3,30 +3,32 @@
 The model stack calls these, never ``pl.pallas_call`` directly.  On CPU
 (this container) kernels run in ``interpret=True`` mode; on TPU they
 compile for real.  Block-shape performance parameters default to
-MXU-aligned values and are overridden by install-time AT results when a
-:class:`~repro.core.runtime.ATContext` has tuned them (see
-tuning/install.py).
+MXU-aligned values and are overridden by install-time AT results published
+through :func:`repro.at.tuned` (see tuning/install.py).
+
+``set_tuned`` is a deprecation shim over :func:`repro.at.publish`; new
+code publishes via ``autotune(..., publish=(kernel, mapping))`` and reads
+via ``at.tuned(kernel)``.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 
+from ..at.session import publish as _publish
+from ..at.session import tuned as _tuned
 from . import ref
 from .flash_attention import flash_attention, flash_decode
 from .matmul import matmul
 from .ssm_scan import selective_scan
 
-_TUNED: dict[str, Any] = {}      # install-time AT writes kernel PPs here
-
 
 def set_tuned(name: str, **pps) -> None:
-    _TUNED.setdefault(name, {}).update(pps)
+    """Deprecated: use ``repro.at.publish`` (kept as a thin shim)."""
+    _publish(name, **pps)
 
 
-def tuned(name: str) -> dict:
-    return dict(_TUNED.get(name, {}))
+def tuned(name: str, **bps) -> dict:
+    return _tuned(name, **bps)
 
 
 def on_cpu() -> bool:

@@ -2,11 +2,14 @@
 
 CPU-scale (reduced configs): submits a stream of synthetic requests,
 reports throughput/latency, and demonstrates the run-time AT path (decode
-bucket variants tuned on the first calls, then committed).
+bucket variants tuned on the first calls through a ``repro.at`` session,
+then committed; committed winners persist in the session's record store,
+so a restarted server starts warm).
 
 Usage::
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8 \
+        --autotune --workdir /tmp/at
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import time
 import jax
 import numpy as np
 
+from .. import at
 from ..configs import get_arch
 from ..models import build_model
 from ..serving import Request, ServingEngine
@@ -23,11 +27,34 @@ from ..serving import Request, ServingEngine
 
 def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
           max_len: int = 96, prompt_len: int = 16, max_new: int = 12,
-          seed: int = 0) -> dict:
+          seed: int = 0, autotune: bool = False,
+          workdir: str = ".") -> dict:
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
-    engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len)
+    tuner = None
+    if autotune:
+        from ..tuning import DecodeAutoTuner
+        session = at.AutoTuner(workdir)
+
+        def make_decode(block_k):
+            # each candidate gets its own jit cache and publishes its
+            # block PP before its first trace, so the kernel path reads
+            # its own block_k at trace time (on CPU the reference path
+            # ignores it and the select exercises the paper's run-time
+            # measurement flow rather than a real kernel trade-off)
+            decode_bk = jax.jit(model.decode_step)
+
+            def variant(p, caches, token, pos, block_k=block_k):
+                at.publish("flash_decode", block_k=block_k)
+                return decode_bk(p, caches, token, pos)
+            return variant
+
+        tuner = DecodeAutoTuner(session, make_decode,
+                                buckets=(128, 512, 2048),
+                                block_ks=(256, 512))
+    engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
+                           autotuner=tuner)
     rng = np.random.default_rng(seed)
     t0 = time.time()
     for rid in range(n_requests):
@@ -46,6 +73,7 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         "tokens_per_s": total_tokens / wall if wall else 0.0,
         "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
         "wall_s": wall,
+        "committed_buckets": tuner.committed() if tuner else None,
     }
 
 
@@ -56,10 +84,15 @@ def main() -> None:
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--autotune", action="store_true",
+                    help="run-time AT over decode buckets (repro.at)")
+    ap.add_argument("--workdir", default=".",
+                    help="AT session workdir (param files + record store)")
     args = ap.parse_args()
     out = serve(arch=args.arch, n_requests=args.requests,
                 n_lanes=args.lanes, max_len=args.max_len,
-                max_new=args.max_new)
+                max_new=args.max_new, autotune=args.autotune,
+                workdir=args.workdir)
     print(f"[serve] {out['finished']}/{out['requests']} requests, "
           f"{out['generated_tokens']} tokens in {out['wall_s']:.1f}s "
           f"({out['tokens_per_s']:.1f} tok/s, "

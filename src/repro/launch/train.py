@@ -41,13 +41,30 @@ def train(arch: str = "deepseek-7b", steps: int = 20, reduced: bool = True,
           seq_len: int = 64, batch: int = 8, lr: float = 3e-4,
           remat: str = "none", num_microbatches: int = 1,
           log_every: int = 5, seed: int = 0,
-          run_steps: int | None = None) -> dict:
+          run_steps: int | None = None, autotune: bool = False,
+          tune_shape: str = "train_4k") -> dict:
     """``steps`` fixes the schedule horizon; ``run_steps`` optionally stops
-    this invocation early (simulated preemption for restart tests)."""
+    this invocation early (simulated preemption for restart tests).
+
+    ``autotune=True`` runs before-execute-time AT (paper phase ordering:
+    install -> static -> run) through a ``repro.at`` session before the
+    first step: the production-mesh layout plan for ``(arch, tune_shape)``
+    is selected on the roofline estimate and persisted in the session
+    record store under ``ckpt_dir`` (or cwd), so later launches of the
+    same cell skip the selection.
+    """
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
+    tuned_plan = None
+    if autotune:
+        from .. import at
+        from ..tuning import tune_layout
+        session = at.AutoTuner(ckpt_dir or ".")
+        tuned_plan = tune_layout(session, arch, tune_shape)
+        print(f"[train] static AT: layout plan for ({arch}, {tune_shape}) "
+              f"-> {tuned_plan!r}")
     plan = LayoutPlan(name="host", remat=remat,
                       num_microbatches=num_microbatches)
     opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=max(2, steps // 10),
@@ -107,7 +124,8 @@ def train(arch: str = "deepseek-7b", steps: int = 20, reduced: bool = True,
     wall = time.time() - t_start
     return {"losses": losses, "final_loss": losses[-1] if losses else None,
             "steps": end_step - start_step, "wall_s": wall,
-            "params": params, "opt_state": opt_state}
+            "params": params, "opt_state": opt_state,
+            "tuned_plan": tuned_plan}
 
 
 def main() -> None:
@@ -123,11 +141,15 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="none")
+    ap.add_argument("--autotune", action="store_true",
+                    help="static-AT layout selection before step 0")
+    ap.add_argument("--tune-shape", default="train_4k")
     args = ap.parse_args()
     out = train(arch=args.arch, steps=args.steps, reduced=args.reduced,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 seq_len=args.seq_len, batch=args.batch, lr=args.lr,
-                remat=args.remat, num_microbatches=args.microbatches)
+                remat=args.remat, num_microbatches=args.microbatches,
+                autotune=args.autotune, tune_shape=args.tune_shape)
     print(f"[train] done: {out['steps']} steps, final loss "
           f"{out['final_loss']:.4f}, {out['wall_s']:.1f}s")
 

@@ -58,7 +58,7 @@ class ServingEngine:
                  max_len: int = 512, eos_id: int | None = None,
                  decode_fn: Callable | None = None,
                  prefill_fn: Callable | None = None,
-                 greedy: bool = True):
+                 greedy: bool = True, autotuner=None):
         self.model = model
         self.params = params
         self.n_lanes = n_lanes
@@ -72,6 +72,10 @@ class ServingEngine:
         self._decode = decode_fn or jax.jit(model.decode_step)
         self._prefill = prefill_fn or jax.jit(
             model.prefill, static_argnums=(3,))
+        # run-time AT hook (repro.at): a tuning/dynamic.DecodeAutoTuner
+        # routing each decode step through the per-bucket dynamic select
+        # region; None keeps the plain jit'd decode path.
+        self.autotuner = autotuner
         self.steps = 0
 
     # -- admission ---------------------------------------------------------
@@ -110,8 +114,15 @@ class ServingEngine:
                 req = self.active[lane.rid]
                 token[i, 0] = req.out_tokens[-1]
                 pos[i] = lane.pos
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(token), jnp.asarray(pos))
+        if self.autotuner is not None:
+            kv_len = int(pos.max()) + 1
+            logits, self.caches = self.autotuner.decode(
+                kv_len, self.params, self.caches, jnp.asarray(token),
+                jnp.asarray(pos))
+        else:
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(token),
+                jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.steps += 1
         for i, lane in enumerate(self.lanes):

@@ -6,13 +6,17 @@ decode implementations (kernel block sizes / layouts); the first calls in
 each bucket measure the candidates (run-time auto-tuning happens at the
 call site, §4.1), then the winner is committed and ``OAT_DynPerfThis``
 semantics apply — later calls run the optimised variant with no tuning.
+
+Declared through the ``repro.at`` session: committed winners persist in
+the session's record store, so a restarted server starts every bucket
+already committed (no first-call tuning jitter on the warm path).
 """
 from __future__ import annotations
 
 from typing import Callable
 
-from ..core import ATContext, OAT_DYNAMIC
-from ..core.directives import dynamic_select
+from .. import at
+from ..core import ATContext
 from ..serving.engine import length_bucket
 
 DEFAULT_BLOCK_KS = (256, 512, 1024)
@@ -21,23 +25,26 @@ DEFAULT_BLOCK_KS = (256, 512, 1024)
 class DecodeAutoTuner:
     """Per-bucket dynamic select over decode variants."""
 
-    def __init__(self, ctx: ATContext, make_decode: Callable[[int], Callable],
+    def __init__(self, session: "at.AutoTuner | ATContext",
+                 make_decode: Callable[[int], Callable],
                  buckets=(512, 2048, 8192, 32768),
                  block_ks=DEFAULT_BLOCK_KS):
-        self.ctx = ctx
+        self.session = at.AutoTuner.for_context(session)
+        self.ctx = self.session.ctx
         self.buckets = buckets
         self.regions = {}
         for b in buckets:
             name = f"DecodeBucket_{b}"
-            sel = dynamic_select(ctx, name=name)
+            sel = self.session.autotune("dynamic", "select", name=name)
             for bk in block_ks:
                 sel.alternative(name=f"block_k={bk}")(make_decode(bk))
-            self.regions[b] = sel.finalize()
-        ctx.OAT_ATexec(OAT_DYNAMIC, [f"DecodeBucket_{b}" for b in buckets])
+            self.regions[b] = sel.region
+        self.session.run("dynamic",
+                         [f"DecodeBucket_{b}" for b in buckets])
 
     def decode(self, kv_len: int, *args, **kwargs):
         b = length_bucket(kv_len, self.buckets)
-        return self.ctx.execute(f"DecodeBucket_{b}", *args, **kwargs)
+        return self.session.execute(f"DecodeBucket_{b}", *args, **kwargs)
 
     def committed(self) -> dict[int, int | None]:
         return {b: self.ctx.dynamic_state[f"DecodeBucket_{b}"].committed

@@ -6,25 +6,29 @@ The paper's install-time phase tunes PPs that depend only on the machine
 sublane dims) — the documented hardware adaptation of the paper's 1..16
 unroll range.
 
-Executors:
-* on TPU — wall-clock over the real kernel (WallClockExecutor);
-* on CPU (this container) — interpret-mode wall-clock for small shapes,
-  or the analytic VMEM-pressure cost model (default: fast, deterministic;
-  penalises tiles that bust the ~16 MB more-than-half-VMEM budget and
-  rewards MXU-shaped tiles).
+Declared through the ``repro.at`` session API.  Executor backends
+(``at.executors``):
 
-Results land in ``ops.set_tuned`` + ``OAT_InstallParam.dat`` so every later
-phase (and the serving engine) picks them up — the FIBER hierarchy.
+* ``analytic-cost`` (default here) — the VMEM-pressure cost model below:
+  fast, deterministic; penalises tiles that bust the ~16 MB
+  more-than-half-VMEM budget and rewards MXU-shaped tiles;
+* ``interp`` (registered by this module) — interpret-mode wall-clock over
+  the real Pallas kernels at small shapes (CPU container); on TPU the
+  session default ``wall-clock`` times the real kernels.
+
+Results are published to :func:`repro.at.tuned` under the kernel names
+(``matmul`` / ``flash_attention`` / ``ssm_scan``) — every later phase and
+the serving engine picks them up (the FIBER hierarchy) — and persist in
+the session's :class:`~repro.at.records.ATRecordStore`, so a second
+process on the same machine warm-loads them without re-timing.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..core import (ATContext, Fitting, OAT_INSTALL, Varied,
-                    WallClockExecutor)
-from ..core.directives import install_unroll, install_variable
-from ..kernels import ops
+from .. import at
+from ..core import ATContext, Fitting, Varied, WallClockExecutor
 from ..kernels.flash_attention import attention_vmem_bytes
 from ..kernels.matmul import matmul_vmem_bytes
 from ..kernels.ssm_scan import ssm_vmem_bytes
@@ -42,76 +46,89 @@ def _vmem_cost(used: int, mxu_aligned: bool, grid_steps: float) -> float:
     return grid_steps * (1.0 + 4.0 * over) * (1.0 if mxu_aligned else 2.0)
 
 
-def register_kernel_regions(ctx: ATContext, *, m: int = 2048,
-                            n: int = 2048, k: int = 2048,
+def register_kernel_regions(session: "at.AutoTuner | ATContext", *,
+                            m: int = 2048, n: int = 2048, k: int = 2048,
                             seq: int = 2048, d_head: int = 128,
                             d_inner: int = 4096, d_state: int = 16) -> None:
     """Declare the install-time regions for every kernel PP."""
+    session = at.AutoTuner.for_context(session)
 
-    @install_variable(
-        ctx, name="MatmulBlocks",
+    @session.autotune(
+        "install", "variable", name="MatmulBlocks",
         varied=Varied(("bm", "bn", "bk"), values=(128, 256, 512)),
-        search="ad-hoc")
+        search="ad-hoc", executor="analytic-cost",
+        publish=("matmul", {"bm": "block_m", "bn": "block_n",
+                            "bk": "block_k"}))
     def matmul_blocks(bm=128, bn=128, bk=128):
         used = matmul_vmem_bytes(bm, bn, bk)
         grid = (m / bm) * (n / bn) * (k / bk)
-        return lambda: _vmem_cost(used, bm % 8 == 0 and bn % 128 == 0
-                                  and bk % 128 == 0, grid)
+        return _vmem_cost(used, bm % 8 == 0 and bn % 128 == 0
+                          and bk % 128 == 0, grid)
 
-    @install_variable(
-        ctx, name="FlashBlocks",
+    @session.autotune(
+        "install", "variable", name="FlashBlocks",
         varied=Varied(("block_q", "block_k"), values=(128, 256, 512, 1024)),
-        search="ad-hoc")
+        search="ad-hoc", executor="analytic-cost",
+        publish=("flash_attention", {"block_q": "block_q",
+                                     "block_k": "block_k"}))
     def flash_blocks(block_q=128, block_k=128):
         used = attention_vmem_bytes(block_q, block_k, d_head)
         grid = (seq / block_q) * (seq / block_k)
-        return lambda: _vmem_cost(used, block_q % 128 == 0
-                                  and block_k % 128 == 0, grid)
+        return _vmem_cost(used, block_q % 128 == 0
+                          and block_k % 128 == 0, grid)
 
-    @install_variable(
-        ctx, name="SsmChunk", varied=Varied(("chunk",),
-                                            values=(32, 64, 128, 256, 512)),
-        fitting=Fitting.dspline())
+    @session.autotune(
+        "install", "variable", name="SsmChunk",
+        varied=Varied(("chunk",), values=(32, 64, 128, 256, 512)),
+        fitting=Fitting.dspline(), executor="analytic-cost",
+        publish=("ssm_scan", {"chunk": "chunk"}))
     def ssm_chunk(chunk=64):
         used = ssm_vmem_bytes(chunk, d_inner, d_state)
         grid = seq / chunk
-        return lambda: _vmem_cost(used, chunk % 8 == 0, grid)
+        return _vmem_cost(used, chunk % 8 == 0, grid)
 
 
-def run_install_tuning(ctx: ATContext, wall_clock: bool = False) -> dict:
-    """Execute install-time AT and publish tuned PPs to the kernel layer."""
-    if not ctx.store.has_default_bps():
-        for k_, v in (("OAT_NUMPROCS", 1), ("OAT_STARTTUNESIZE", 1024),
-                      ("OAT_ENDTUNESIZE", 4096), ("OAT_SAMPDIST", 1024)):
-            ctx.store.set_bp(k_, v)
-    if wall_clock:
-        ctx._executor_factory = _wallclock_factory
-    ctx.OAT_ATexec(OAT_INSTALL, None)
-    tuned = {}
-    for region, mapping in (
-            ("MatmulBlocks", {"MatmulBlocks_BM": "block_m",
-                              "MatmulBlocks_BN": "block_n",
-                              "MatmulBlocks_BK": "block_k"}),
-            ("FlashBlocks", {"FlashBlocks_BLOCK_Q": "block_q",
-                             "FlashBlocks_BLOCK_K": "block_k"}),
-            ("SsmChunk", {"SsmChunk_CHUNK": "chunk"})):
+_KERNEL_REGIONS = ("MatmulBlocks", "FlashBlocks", "SsmChunk")
+_KERNEL_OF = {"MatmulBlocks": "matmul", "FlashBlocks": "flash_attention",
+              "SsmChunk": "ssm_scan"}
+
+
+def run_install_tuning(session: "at.AutoTuner | ATContext",
+                       wall_clock: bool = False) -> dict:
+    """Execute install-time AT and publish tuned PPs to the kernel layer.
+
+    ``wall_clock=True`` switches the kernel regions to the ``interp``
+    executor (interpret-mode Pallas wall-clock).  A session whose record
+    store already holds results for this machine re-loads them without
+    invoking any executor.
+    """
+    session = at.AutoTuner.for_context(session)
+    session.ensure_default_bps(numprocs=1, start=1024, end=4096, dist=1024)
+    names = [n for n in _KERNEL_REGIONS if n in session.ctx.registry]
+    for name in names:
+        # set (not just override) so a later call with the other setting
+        # restores the analytic default
+        session.ctx.registry.get(name).metadata["executor"] = \
+            "interp" if wall_clock else "analytic-cost"
+    session.run("install", names)
+    tuned: dict[str, dict] = {}
+    for region_name in names:
+        spec = session._publish_maps.get(region_name)
+        if spec is None:
+            continue
+        _, mapping = spec
         pps = {}
-        for qual, bare in mapping.items():
-            e = ctx.store.entry(qual)
+        for src, dst in mapping.items():
+            e = session.ctx.store.entry(f"{region_name}_{src.upper()}")
             if e is not None:
-                pps[bare] = int(e.value)
+                pps[dst] = int(e.value)
         if pps:
-            tuned[region] = pps
-    if "MatmulBlocks" in tuned:
-        ops.set_tuned("matmul", **tuned["MatmulBlocks"])
-    if "FlashBlocks" in tuned:
-        ops.set_tuned("flash_attention", **tuned["FlashBlocks"])
-    if "SsmChunk" in tuned:
-        ops.set_tuned("ssm_scan", **tuned["SsmChunk"])
+            tuned[region_name] = pps
     return tuned
 
 
-def _wallclock_factory(region, bp_env):
+@at.executors.register("interp")
+def _interp_executor(region, bp_env):
     """Interpret-mode wall-clock executor (small shapes, CPU)."""
     key = jax.random.PRNGKey(0)
 

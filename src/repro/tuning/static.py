@@ -19,15 +19,13 @@ the paper's ``(OAT_PROBSIZE 1024 (MyMatMul_I 4) ...)`` records.
 """
 from __future__ import annotations
 
-import json
-import os
 from typing import Callable
 
+from .. import at
 from ..configs import get_arch, get_shape
-from ..core import ATContext, OAT_STATIC
+from ..core import ATContext
 from ..core.cost import roofline_terms
-from ..core.directives import SelectRegion
-from ..launch.analytic import model_flops, step_costs
+from ..launch.analytic import step_costs
 from ..launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
 TRAIN_PLANS = ("tp", "fsdp")
@@ -109,11 +107,14 @@ def compiled_plan_cost(arch_name: str, shape_name: str, plan: str,
     return from_artifact(rec).bound_s
 
 
-def tune_layout(ctx: ATContext, arch_name: str, shape_name: str,
+def tune_layout(session: "at.AutoTuner | ATContext", arch_name: str,
+                shape_name: str,
                 cost_fn: Callable[[str], float] | None = None,
                 chips: int = 256) -> str:
     """Static-AT select over layout plans; returns the winner and records
-    it in the FIBER store + static param file."""
+    it in the FIBER store + static param file + the session record store
+    (so a later process skips the selection for an already-tuned cell)."""
+    session = at.AutoTuner.for_context(session)
     cfg = get_arch(arch_name)
     shape = get_shape(shape_name)
     plans = candidate_plans(shape.kind)
@@ -122,29 +123,28 @@ def tune_layout(ctx: ATContext, arch_name: str, shape_name: str,
 
     region_name = f"Layout_{arch_name}_{shape_name}".replace("-", "_") \
         .replace(".", "_")
-    sel = SelectRegion(ctx, "static", region_name,
-                       params=["bp OAT_PROBSIZE", "bp OAT_NUMPROCS"])
+    sel = session.autotune("static", "select", name=region_name,
+                           params=["bp OAT_PROBSIZE", "bp OAT_NUMPROCS"])
     for p in plans:
         cost = cost_fn(p)
         sel.alternative(according=f"estimated {cost!r}", name=p)(
             lambda p=p: p)
-    region = sel.finalize()
 
-    if not ctx.store.has_default_bps():
-        ctx.store.set_bp("OAT_NUMPROCS", chips)
-        ctx.store.set_bp("OAT_STARTTUNESIZE", shape.seq_len)
-        ctx.store.set_bp("OAT_ENDTUNESIZE", shape.seq_len)
-        ctx.store.set_bp("OAT_SAMPDIST", max(shape.seq_len, 1))
-    ctx.phase_ran["install"] = True       # layout tuning has no install deps
-    ctx.OAT_ATexec(OAT_STATIC, [region_name])
-    e = ctx.store.entry(f"{region_name}_SELECT")
-    idx = int(e.value) if e is not None else 0
+    if not session.ctx.store.has_default_bps():
+        session.set_bps(numprocs=chips, start=shape.seq_len,
+                        end=shape.seq_len, dist=max(shape.seq_len, 1))
+    session.ctx.phase_ran["install"] = True   # layout AT has no install deps
+    session.run("static", [region_name])
+    best = session.best(region_name)
+    idx = int(best.get(f"{region_name}_SELECT", 0))
     return plans[idx]
 
 
-def tune_all_layouts(ctx: ATContext, cells, cost_fn=None) -> dict:
+def tune_all_layouts(session: "at.AutoTuner | ATContext", cells,
+                     cost_fn=None) -> dict:
+    session = at.AutoTuner.for_context(session)
     out = {}
     for arch_name, shape_name in cells:
         out[(arch_name, shape_name)] = tune_layout(
-            ctx, arch_name, shape_name, cost_fn)
+            session, arch_name, shape_name, cost_fn)
     return out

@@ -1,0 +1,56 @@
+"""Paper Sample 8 source: the ppOpen-APPL/FDM stress kernel loop nest with
+its ``#OAT$`` annotations, plus an input generator.
+
+Shared by tests/test_codegen.py and examples/autotune_fdm.py (kept free of
+test-only dependencies so the example can import it directly).
+"""
+import numpy as np
+
+
+def fdm_stress(NX, NY, NZ, LAM, RIG, Q, ABSX, ABSY, ABSZ,
+               DXVX, DYVY, DZVZ, DXVY, DYVX, DXVZ, DZVX, DYVZ, DZVY,
+               SXX, SYY, SZZ, SXY, SXZ, SYZ, DT):
+    #OAT$ install LoopFusionSplit region start
+    #OAT$ name FDMStress
+    for k in range(NZ):
+        for j in range(NY):
+            for i in range(NX):
+                RL = LAM[i, j, k]
+                RM = RIG[i, j, k]
+                RM2 = RM + RM
+                RLTHETA = (DXVX[i, j, k] + DYVY[i, j, k] + DZVZ[i, j, k]) * RL
+                #OAT$ SplitPointCopyDef region start
+                QG = ABSX[i] * ABSY[j] * ABSZ[k] * Q[i, j, k]
+                #OAT$ SplitPointCopyDef region end
+                SXX[i, j, k] = (SXX[i, j, k] + (RLTHETA + RM2 * DXVX[i, j, k]) * DT) * QG
+                SYY[i, j, k] = (SYY[i, j, k] + (RLTHETA + RM2 * DYVY[i, j, k]) * DT) * QG
+                SZZ[i, j, k] = (SZZ[i, j, k] + (RLTHETA + RM2 * DZVZ[i, j, k]) * DT) * QG
+                #OAT$ SplitPoint (k, j, i)
+                STMP1 = 1.0 / RIG[i, j, k]
+                STMP2 = 1.0 / RIG[i + 1, j, k]
+                STMP4 = 1.0 / RIG[i, j, k + 1]
+                STMP3 = STMP1 + STMP2
+                RMAXY = 4.0 / (STMP3 + 1.0 / RIG[i, j + 1, k] + 1.0 / RIG[i + 1, j + 1, k])
+                RMAXZ = 4.0 / (STMP3 + STMP4 + 1.0 / RIG[i + 1, j, k + 1])
+                RMAYZ = 4.0 / (STMP3 + STMP4 + 1.0 / RIG[i, j + 1, k + 1])
+                #OAT$ SplitPointCopyInsert
+                SXY[i, j, k] = (SXY[i, j, k] + (RMAXY * (DXVY[i, j, k] + DYVX[i, j, k])) * DT) * QG
+                SXZ[i, j, k] = (SXZ[i, j, k] + (RMAXZ * (DXVZ[i, j, k] + DZVX[i, j, k])) * DT) * QG
+                SYZ[i, j, k] = (SYZ[i, j, k] + (RMAYZ * (DYVZ[i, j, k] + DZVY[i, j, k])) * DT) * QG
+    #OAT$ install LoopFusionSplit region end
+    return SXX, SYY, SZZ, SXY, SXZ, SYZ
+
+
+def _fdm_inputs(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    shp = (n + 1, n + 1, n + 1)
+    arrs = dict(LAM=rng.normal(size=shp),
+                RIG=rng.uniform(0.5, 2.0, size=shp),
+                Q=rng.normal(size=shp), ABSX=rng.normal(size=n + 1),
+                ABSY=rng.normal(size=n + 1), ABSZ=rng.normal(size=n + 1))
+    for k in ("DXVX", "DYVY", "DZVZ", "DXVY", "DYVX", "DXVZ", "DZVX",
+              "DYVZ", "DZVY"):
+        arrs[k] = rng.normal(size=shp)
+    state = {k: rng.normal(size=shp) for k in
+             ("SXX", "SYY", "SZZ", "SXY", "SXZ", "SYZ")}
+    return arrs, state

@@ -1,0 +1,302 @@
+"""The ``repro.at`` session API: one frontend, pluggable backends, and the
+persistent tuning database (warm path = zero executor invocations)."""
+import json
+import os
+
+import pytest
+
+import repro.at as at
+from repro.at.records import bp_key
+from repro.core import ATContext, ATRegion, SearchPlan, Varied
+
+
+@pytest.fixture(autouse=True)
+def _isolate_published():
+    """The published-PP table is process-global (parity with the old
+    ops._TUNED side-channel); clear it so tests are order-independent."""
+    at.clear_published()
+    yield
+    at.clear_published()
+
+
+def cost_fn(bm, bn):
+    return abs(bm - 256) + abs(bn - 512) + 1.0
+
+
+def build_session(workdir, *, booby_trap=False, **kw):
+    """A session with one region per phase (install/static/dynamic)."""
+    kw.setdefault("executor", "analytic-cost")
+    t = at.AutoTuner(workdir, **kw)
+    t.set_bps(numprocs=1, start=1024, end=2048, dist=1024)
+
+    @t.autotune("install", "variable", name="Blocks",
+                varied=Varied(("bm", "bn"), values=(128, 256, 512)),
+                search="ad-hoc",
+                publish=("matmul", {"bm": "block_m", "bn": "block_n"}))
+    def blocks(bm=128, bn=128):
+        if booby_trap:
+            raise AssertionError("executed on the warm path")
+        return cost_fn(bm, bn)
+
+    @t.autotune("static", "variable", name="Chunk",
+                varied=Varied(("c",), values=(32, 64, 128)))
+    def chunk(c=32):
+        if booby_trap:
+            raise AssertionError("executed on the warm path")
+        return abs(c - 64) + 1.0
+
+    sel = t.autotune("dynamic", "select", name="Decode")
+    sel.alternative(name="slow")(lambda: "slow")
+    sel.alternative(name="fast")(lambda: "fast")
+    return t, sel
+
+
+class TestSessionRoundTrip:
+    def test_full_phase_round_trip(self, tmp_path):
+        t, sel = build_session(str(tmp_path))
+        ran = t.run("all")
+        assert ran == {"install": ["Blocks"], "static": ["Chunk"],
+                       "dynamic": ["Decode"]}
+        # install optimum found by the ad-hoc coordinate search
+        assert t.best("Blocks") == {"Blocks_BM": 256, "Blocks_BN": 512}
+        # static optimum recorded per BP point
+        assert t.best("Chunk") == {"Chunk_C": 64}
+        assert t.static_pp("Chunk", "Chunk_C", 1024) == 64
+        # dynamic: candidates tried one per call, then committed
+        outs = [sel() for _ in range(3)]
+        assert set(outs[:2]) == {"slow", "fast"}
+        assert t.ctx.dynamic_state["Decode"].committed is not None
+        # published kernel PPs readable through the single lookup
+        assert at.tuned("matmul") == {"block_m": 256, "block_n": 512}
+
+    def test_phase_order_enforced(self, tmp_path):
+        t, _ = build_session(str(tmp_path))
+        from repro.core.errors import OATPriorityError
+        with pytest.raises(OATPriorityError):
+            t.run("static")
+
+    def test_select_needs_no_finalize(self, tmp_path):
+        t = at.AutoTuner(str(tmp_path))
+        sel = t.autotune("dynamic", "select", name="S")
+        sel.alternative()(lambda: 1)
+        assert "S" in t.ctx.registry            # registered immediately
+        assert sel.finalize() is sel.region      # compat no-op
+
+    def test_dsl_preprocess_path(self, tmp_path):
+        def k(N, A):
+            #OAT$ install unroll region start
+            #OAT$ name DslK
+            #OAT$ varied (i) from 1 to 2
+            for i in range(N):
+                A[i] = A[i] * 2.0
+            #OAT$ install unroll region end
+            return A
+
+        t = at.AutoTuner(str(tmp_path))
+        regions = t.preprocess(k)
+        assert "DslK" in regions and "DslK" in t.ctx.registry
+
+
+class TestDeprecationShims:
+    def test_shims_dispatch_to_same_registry(self, tmp_path):
+        """Legacy decorators and the session decorator land in the same
+        regions, tuned identically by the session."""
+        from repro.core.directives import install_variable
+        t = at.AutoTuner(str(tmp_path), executor="analytic-cost")
+        t.set_bps(numprocs=1, start=1024, end=1024, dist=1024)
+        with pytest.deprecated_call():
+            @install_variable(t.ctx, name="Legacy",
+                              varied=Varied(("x",), values=(1, 2, 3)))
+            def legacy(x=1):
+                return float(x)
+        assert "Legacy" in t.ctx.registry
+        t.run("install", ["Legacy"])
+        assert t.best("Legacy") == {"Legacy_X": 1}
+        # and the result persisted like any session-declared region
+        assert t.records.lookup("install", "Legacy", {}) is not None
+
+    def test_select_region_shim_warns(self, tmp_path):
+        from repro.core.directives import dynamic_select
+        ctx = ATContext(str(tmp_path))
+        with pytest.deprecated_call():
+            sel = dynamic_select(ctx, name="OldSel")
+        sel.alternative()(lambda: 0)
+        sel.finalize()
+        assert "OldSel" in ctx.registry
+
+    def test_ops_set_tuned_shim(self):
+        from repro.kernels import ops
+        ops.set_tuned("shim_kernel", block_m=64)
+        assert at.tuned("shim_kernel") == {"block_m": 64}
+        assert ops.tuned("shim_kernel") == {"block_m": 64}
+
+
+class TestRecordStorePersistence:
+    def test_warm_path_zero_executor_invocations(self, tmp_path):
+        """The acceptance criterion: a fresh AutoTuner on the same workdir
+        loads install/static optima without a single measurement."""
+        wd = str(tmp_path)
+        t1, _ = build_session(wd)
+        t1.run("all")
+        assert t1.executor_calls > 0
+        cold_best = (t1.best("Blocks"), t1.best("Chunk"))
+
+        t2, _ = build_session(wd, booby_trap=True)
+        ran = t2.run("all")
+        assert t2.executor_calls == 0
+        assert ran["install"] == [] and ran["static"] == []
+        assert ("install", "Blocks") in t2.warm_hits
+        assert ("static", "Chunk") in t2.warm_hits
+        assert (t2.best("Blocks"), t2.best("Chunk")) == cold_best
+        # paper-format .dat files re-materialised for fidelity
+        assert os.path.exists(os.path.join(wd, "OAT_InstallParam.dat"))
+        assert os.path.exists(os.path.join(wd, "OAT_StaticParam.dat"))
+
+    def test_dynamic_commit_persists_across_sessions(self, tmp_path):
+        wd = str(tmp_path)
+        t1, sel1 = build_session(wd)
+        t1.run("all")
+        for _ in range(3):
+            sel1()
+        committed = t1.ctx.dynamic_state["Decode"].committed
+
+        t2, sel2 = build_session(wd, booby_trap=True)
+        t2.run("all")
+        # committed winner warm-loaded: the first call runs it directly
+        assert t2.ctx.dynamic_state["Decode"].committed == committed
+
+    def test_force_retunes(self, tmp_path):
+        wd = str(tmp_path)
+        t1, _ = build_session(wd)
+        t1.run("install")
+        t2, _ = build_session(wd)
+        t2.run("install", force=True)
+        assert t2.executor_calls > 0
+
+    def test_records_scoped_by_machine(self, tmp_path):
+        wd = str(tmp_path)
+        t1, _ = build_session(wd)
+        t1.run("install")
+        # a different machine fingerprint must not see the records
+        t2, _ = build_session(wd, machine="some-other-box")
+        t2.run("install")
+        assert t2.executor_calls > 0
+
+    def test_jsonl_format_readable(self, tmp_path):
+        wd = str(tmp_path)
+        t, _ = build_session(wd)
+        t.run("install")
+        lines = open(os.path.join(wd, "OAT_Records.jsonl")).read() \
+            .strip().splitlines()
+        recs = [json.loads(ln) for ln in lines]
+        assert any(r["region"] == "Blocks" and r["phase"] == "install"
+                   and r["pp"] == {"Blocks_BM": 256, "Blocks_BN": 512}
+                   for r in recs)
+
+    def test_corrupt_lines_skipped(self, tmp_path):
+        wd = str(tmp_path)
+        t, _ = build_session(wd)
+        t.run("install")
+        with open(os.path.join(wd, "OAT_Records.jsonl"), "a") as f:
+            f.write("not json\n")
+        store = at.ATRecordStore(wd)
+        assert store.lookup("install", "Blocks", {}) is not None
+
+    def test_bp_key_canonical(self):
+        assert bp_key({"b": 2, "a": 1}) == bp_key({"a": 1, "b": 2})
+        assert bp_key(None) == bp_key({}) == ()
+
+
+class TestBackendRegistries:
+    def test_unknown_backend_raises(self):
+        from repro.core.errors import OATSpecError
+        with pytest.raises(OATSpecError, match="unknown executor"):
+            at.executors.get("no-such-backend")
+
+    def test_duplicate_registration_needs_overwrite(self):
+        from repro.core.errors import OATSpecError
+        at.searchers.register("test-dup", overwrite=True)(lambda *a, **k: None)
+        with pytest.raises(OATSpecError, match="already registered"):
+            at.searchers.register("test-dup")(lambda *a, **k: None)
+        at.searchers.register("test-dup", overwrite=True)(lambda *a, **k: None)
+
+    def test_builtin_backends_present(self):
+        for name in ("composed", "brute-force", "ad-hoc", "dspline-guided"):
+            assert name in at.searchers
+        for name in ("wall-clock", "analytic-cost"):
+            assert name in at.executors
+
+    def test_custom_executor_by_name(self, tmp_path):
+        calls = []
+
+        @at.executors.register("table-test", overwrite=True)
+        def table(region, bp_env):
+            def measure(asg):
+                calls.append(dict(asg))
+                return float(asg["R_X"])
+            return measure
+
+        t = at.AutoTuner(str(tmp_path), executor="table-test")
+        t.set_bps(numprocs=1, start=1, end=1, dist=1)
+
+        @t.autotune("install", "variable", name="R",
+                    varied=Varied(("x",), values=(3, 1, 2)))
+        def r(x=3):
+            raise AssertionError("custom executor should not call fn")
+
+        t.run("install")
+        assert t.best("R") == {"R_X": 1}
+        assert len(calls) == 3
+
+    def test_session_searcher_override(self, tmp_path):
+        """brute-force searcher joins axes the composed search would split."""
+        t = at.AutoTuner(str(tmp_path), executor="analytic-cost",
+                         searcher="brute-force")
+        t.set_bps(numprocs=1, start=1, end=1, dist=1)
+
+        @t.autotune("install", "variable", name="BF",
+                    varied=Varied(("a", "b"), values=(1, 2, 3)),
+                    search="ad-hoc")
+        def bf(a=1, b=1):
+            return abs(a - 2) * 10 + abs(b - 3) + 1.0
+        t.run("install")
+        assert t.executor_calls == 9           # 3x3 joint product
+        assert t.best("BF") == {"BF_A": 2, "BF_B": 3}
+
+    def test_dspline_guided_searcher_samples_subset(self):
+        region = ATRegion("install", "variable", "G",
+                          fn=lambda **kw: None,
+                          varied=Varied("u", 1, 16))
+        plan = SearchPlan(region)
+        seen = []
+
+        def measure(asg):
+            seen.append(asg["G_U"])
+            u = asg["G_U"]
+            return 10.0 / u + 0.15 * u
+
+        res = at.searchers.get("dspline-guided")(plan, measure)
+        assert len(seen) < 16                  # only sample points measured
+        assert res.best["G_U"] in range(6, 13)  # near the true optimum ~8
+
+    def test_module_level_autotune_uses_current_session(self, tmp_path):
+        t = at.AutoTuner(str(tmp_path))
+        assert at.current_session() is t
+
+        @at.autotune("install", "variable", name="Mod",
+                     varied=Varied(("x",), values=(1, 2)))
+        def mod(x=1):
+            return float(x)
+        assert "Mod" in t.ctx.registry
+
+
+class TestTunedLookup:
+    def test_tuned_with_bp_point(self):
+        at.publish("k1", block=128)
+        at.publish_for_bp("k1", {"OAT_PROBSIZE": 2048}, block=256)
+        assert at.tuned("k1") == {"block": 128}
+        assert at.tuned("k1", OAT_PROBSIZE=2048) == {"block": 256}
+        assert at.tuned("k1", OAT_PROBSIZE=4096) == {"block": 128}
+
+    def test_unknown_kernel_empty(self):
+        assert at.tuned("never-published-kernel") == {}

@@ -1,6 +1,7 @@
 """Fitting (§3.4.3): least-squares / dspline / user-defined / auto."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

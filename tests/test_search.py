@@ -1,5 +1,6 @@
 """Paper §6.4.2 search semantics — Sample 10 counts reproduced exactly."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
