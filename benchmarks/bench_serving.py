@@ -1,0 +1,113 @@
+"""Serving benchmark — dense vs paged engine, ``BENCH_serving.json``.
+
+Runs the serving stack end-to-end (prefill, scheduler, KV backend, decode
+dispatch) for the dense and paged engines on at least two reduced
+configs, and emits the serving-latency quartet per cell: tokens/s, p50/p99
+TTFT, p50/p99 inter-token latency.  Numbers are CPU-proxy (interpret-mode
+kernels on reduced configs) — the *trajectory* across PRs is the signal,
+not the absolute values.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_serving \
+        [--out BENCH_serving.json] [--requests 6] [--max-new 8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_ARCHS = ("yi-6b", "deepseek-7b")
+
+
+def bench_one(arch: str, cache: str, n_requests: int, n_lanes: int,
+              max_len: int, max_new: int, page_size: int,
+              timeslice: int | None, seed: int = 0) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    # undersized page pool (~60% of lane parity, floor: one full sequence
+    # + null page + slack) so the paged engine actually experiences page
+    # pressure rather than degenerating to dense
+    n_pages = None
+    if cache == "paged":
+        blocks_per_seq = -(-max_len // page_size)
+        parity = n_lanes * blocks_per_seq + 1
+        n_pages = max(blocks_per_seq + 2, int(parity * 0.6))
+    engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
+                           cache=cache, n_pages=n_pages,
+                           page_size=page_size, timeslice=timeslice)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for rid in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(4, 12))).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt,
+                              max_new_tokens=max_new))
+    finished = engine.run(max_steps=n_requests * (max_new + 6))
+    wall = time.time() - t0
+    s = engine.metrics.summary()
+    return {
+        "arch": arch, "cache": cache, "n_lanes": n_lanes,
+        "requests": n_requests, "finished": len(finished),
+        "decode_steps": engine.steps,
+        "generated_tokens": s["generated_tokens"],
+        "tokens_per_s": s["generated_tokens"] / wall if wall else 0.0,
+        "ttft_p50_s": s["ttft_s"]["p50"], "ttft_p99_s": s["ttft_s"]["p99"],
+        "itl_p50_s": s["itl_s"]["p50"], "itl_p99_s": s["itl_s"]["p99"],
+        "preemptions": s["preemptions"],
+        "cache_stats": engine.kv.stats(),
+        "wall_s": wall,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--archs", nargs="+", default=list(DEFAULT_ARCHS))
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--timeslice", type=int, default=4)
+    args = ap.parse_args()
+
+    results = []
+    for arch in args.archs:
+        for cache in ("dense", "paged"):
+            ts = args.timeslice if cache == "paged" else None
+            row = bench_one(arch, cache, args.requests, args.lanes,
+                            args.max_len, args.max_new, args.page_size, ts)
+            results.append(row)
+
+            def fmt(x, spec):
+                return format(x, spec) if x is not None else "n/a"
+
+            print(f"[bench_serving] {arch:14s} {cache:6s} "
+                  f"{row['tokens_per_s']:8.1f} tok/s  "
+                  f"ttft p50 {fmt(row['ttft_p50_s'], '.3f')}s "
+                  f"p99 {fmt(row['ttft_p99_s'], '.3f')}s  "
+                  f"itl p50 {fmt(row['itl_p50_s'], '.4f')}s  "
+                  f"preempt {row['preemptions']}")
+
+    payload = {"benchmark": "serving", "results": results}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[bench_serving] wrote {args.out} ({len(results)} cells)")
+
+
+if __name__ == "__main__":
+    main()

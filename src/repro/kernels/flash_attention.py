@@ -245,6 +245,117 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, h, 1, d)
 
 
+# --------------------------------------------------------------------------
+# paged decode: one query token against a paged (block) KV cache
+# --------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float,
+                         block_k: int, n_blk: int):
+    b, ik = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    k_start = ik * block_k
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (psz, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_blk - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "scale",
+                                             "interpret"))
+def flash_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       page_table: jax.Array, kv_len: jax.Array, *,
+                       block_k: int | None = None,
+                       scale: float | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Decode attention over a paged KV cache (vLLM-style PagedAttention).
+
+    q: (B, H, 1, D); pools (P, Hkv, psz, D); ``page_table`` (B, nblk) int32
+    maps each sequence's logical KV block to a physical page.  The table is
+    scalar-prefetched so each grid step DMAs straight from the owning page
+    — the KV working set never materialises densely, which is the whole
+    point: HBM traffic is O(live tokens), not O(B * max_len).  ``kv_len``
+    (B,) masks the valid prefix; table entries past it may point anywhere
+    (page 0 by convention).
+
+    ``block_k`` is the split-K tile *within* a page (the run-time-AT
+    performance parameter of this kernel): it must divide ``page_size``
+    and defaults to the whole page; smaller tiles trade more grid steps
+    for less VMEM per step.
+    """
+    b, h, one, d = q.shape
+    n_pages, hkv, psz, _ = k_pool.shape
+    assert one == 1
+    g = h // hkv
+    nblk = page_table.shape[1]
+    scale = float(scale if scale is not None else d ** -0.5)
+    bk = min(block_k, psz) if block_k else psz
+    if psz % bk:
+        bk = psz                     # block must tile the page exactly
+    sub = psz // bk                  # sub-blocks per page
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, nblk * sub)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               block_k=bk, n_blk=grid[2])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, ik, tbl, ln, s=sub:
+                         (tbl[bb, ik // s], hh, ik % s, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, ik, tbl, ln, s=sub:
+                         (tbl[bb, ik // s], hh, ik % s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(b, h, 1, d)
+
+
 def attention_vmem_bytes(block_q: int, block_k: int, d: int,
                          bytes_per_el: int = 2) -> int:
     """Analytic VMEM footprint per grid step (CPU-side AT cost model)."""

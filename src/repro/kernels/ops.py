@@ -17,7 +17,8 @@ import jax
 from ..at.session import publish as _publish
 from ..at.session import tuned as _tuned
 from . import ref
-from .flash_attention import flash_attention, flash_decode
+from .flash_attention import (flash_attention, flash_decode,
+                              flash_paged_decode)
 from .matmul import matmul
 from .ssm_scan import selective_scan
 
@@ -77,6 +78,28 @@ def decode_attention(q, k, v, kv_len=None, *, use_kernel: bool | None = None,
     kw = tuned("flash_decode")
     kw.update(pps)
     return flash_decode(q, k, v, kv_len, interpret=on_cpu(), **kw)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, kv_len, *,
+                           use_kernel: bool | None = None, **pps):
+    """Decode attention over a paged KV cache (serving hot path).
+
+    Dispatch mirrors :func:`decode_attention`: the Pallas PagedAttention
+    kernel on TPU, the gather+oracle reference on CPU.  Tuned PPs
+    published under ``flash_paged_decode`` (the serving
+    ``DecodeAutoTuner`` publishes the per-bucket ``block_k`` sub-page
+    tile) flow into the kernel call; the page size itself is structural —
+    it is fixed when the pool is built, not a per-call knob.
+    """
+    if use_kernel is None:
+        use_kernel = not on_cpu()
+    if not use_kernel:
+        return ref.paged_decode_ref(q, k_pool, v_pool, page_table, kv_len)
+    kw = tuned("flash_paged_decode")
+    kw.update(pps)
+    kw = {k: v for k, v in kw.items() if k in ("block_k", "scale")}
+    return flash_paged_decode(q, k_pool, v_pool, page_table, kv_len,
+                              interpret=on_cpu(), **kw)
 
 
 def ssm_scan(x, dt, a, b, c, d, *, use_kernel: bool | None = None,

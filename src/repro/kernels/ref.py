@@ -56,6 +56,28 @@ def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return attention_ref(q, k, v, causal=False, scale=scale, kv_len=kv_len)
 
 
+def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     page_table: jax.Array,
+                     kv_len: jax.Array | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Paged one-token decode oracle.
+
+    q: (B, H, 1, D); pools (P, Hkv, psz, D) hold pages shared by all
+    sequences; ``page_table`` (B, nblk) maps each sequence's logical KV
+    block to a physical page (entries beyond ``kv_len`` are ignored — they
+    may point anywhere, typically page 0).  Gathers the pages into a dense
+    (B, Hkv, nblk*psz, D) view and reuses the dense decode oracle.
+    """
+    b = q.shape[0]
+    _, hkv, psz, d = k_pool.shape
+    nblk = page_table.shape[1]
+    k = k_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, nblk * psz, d)
+    v = v_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, nblk * psz, d)
+    return decode_ref(q, k, v, kv_len, scale)
+
+
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: int | None = None,
                       scale: float | None = None, block_q: int = 1024,

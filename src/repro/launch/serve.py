@@ -1,20 +1,25 @@
-"""Serving driver: continuous-batching engine + run-time auto-tuning.
+"""Serving driver: scheduler-driven engine + run-time auto-tuning.
 
 CPU-scale (reduced configs): submits a stream of synthetic requests,
-reports throughput/latency, and demonstrates the run-time AT path (decode
-bucket variants tuned on the first calls through a ``repro.at`` session,
-then committed; committed winners persist in the session's record store,
-so a restarted server starts warm).
+reports throughput/latency percentiles from the serving metrics layer,
+and demonstrates the run-time AT path (decode bucket variants tuned on
+the first calls through a ``repro.at`` session, then committed; committed
+winners persist in the session's record store, so a restarted server
+starts warm).
+
+``--cache paged`` runs the paged-KV backend: memory scales with live
+tokens, and with ``--timeslice`` the engine serves more concurrent
+requests than it has decode lanes (preempted sequences' pages swap to
+host and back).
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8 \
-        --autotune --workdir /tmp/at
+        --cache paged --pages 64 --page-size 16 --autotune --workdir /tmp/at
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -25,55 +30,82 @@ from ..models import build_model
 from ..serving import Request, ServingEngine
 
 
+def _make_autotuner(model, workdir: str, cache: str, page_size: int):
+    """Per-bucket dynamic select over decode variants (repro.at session).
+
+    Each candidate gets its own jit cache and publishes its block PPs
+    before its first trace, so the kernel path reads its own block_k /
+    page-gather granularity at trace time (on CPU the reference path
+    ignores them and the select exercises the paper's run-time measurement
+    flow rather than a real kernel trade-off).
+    """
+    from ..tuning import DecodeAutoTuner
+    session = at.AutoTuner(workdir)
+
+    if cache == "paged":
+        # the paged kernel's run-time PP is the split-K tile *within* a
+        # page (page size itself is structural, fixed at pool build), so
+        # the per-bucket space is block_k in {psz/2, psz}
+        def make_decode(block_k):
+            decode_bk = jax.jit(model.paged_decode_step)
+
+            def variant(p, caches, table, token, pos, block_k=block_k):
+                at.publish("flash_paged_decode", block_k=block_k)
+                return decode_bk(p, caches, table, token, pos)
+            return variant
+
+        return DecodeAutoTuner(session, make_decode,
+                               buckets=(128, 512, 2048),
+                               block_ks=(max(1, page_size // 2), page_size))
+
+    def make_decode(block_k):
+        decode_bk = jax.jit(model.decode_step)
+
+        def variant(p, caches, token, pos, block_k=block_k):
+            at.publish("flash_decode", block_k=block_k)
+            return decode_bk(p, caches, token, pos)
+        return variant
+
+    return DecodeAutoTuner(session, make_decode,
+                           buckets=(128, 512, 2048),
+                           block_ks=(256, 512))
+
+
 def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
           max_len: int = 96, prompt_len: int = 16, max_new: int = 12,
-          seed: int = 0, autotune: bool = False,
-          workdir: str = ".") -> dict:
+          seed: int = 0, autotune: bool = False, workdir: str = ".",
+          cache: str = "dense", n_pages: int | None = None,
+          page_size: int = 16, timeslice: int | None = None) -> dict:
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
-    tuner = None
-    if autotune:
-        from ..tuning import DecodeAutoTuner
-        session = at.AutoTuner(workdir)
-
-        def make_decode(block_k):
-            # each candidate gets its own jit cache and publishes its
-            # block PP before its first trace, so the kernel path reads
-            # its own block_k at trace time (on CPU the reference path
-            # ignores it and the select exercises the paper's run-time
-            # measurement flow rather than a real kernel trade-off)
-            decode_bk = jax.jit(model.decode_step)
-
-            def variant(p, caches, token, pos, block_k=block_k):
-                at.publish("flash_decode", block_k=block_k)
-                return decode_bk(p, caches, token, pos)
-            return variant
-
-        tuner = DecodeAutoTuner(session, make_decode,
-                                buckets=(128, 512, 2048),
-                                block_ks=(256, 512))
+    tuner = _make_autotuner(model, workdir, cache, page_size) \
+        if autotune else None
     engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
-                           autotuner=tuner)
+                           autotuner=tuner, cache=cache, n_pages=n_pages,
+                           page_size=page_size, timeslice=timeslice)
     rng = np.random.default_rng(seed)
-    t0 = time.time()
     for rid in range(n_requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=rng.integers(4, prompt_len)).tolist()
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=max_new))
-    finished = engine.run(max_steps=n_requests * (max_new + 2))
-    wall = time.time() - t0
-    total_tokens = sum(len(r.out_tokens) for r in finished)
-    ttfts = [r.first_token_t - r.submit_t for r in finished
-             if r.first_token_t]
+    finished = engine.run(max_steps=n_requests * (max_new + 4))
+    summary = engine.metrics.summary()
     return {
         "finished": len(finished), "requests": n_requests,
-        "decode_steps": engine.steps, "generated_tokens": total_tokens,
-        "tokens_per_s": total_tokens / wall if wall else 0.0,
-        "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
-        "wall_s": wall,
-        "committed_buckets": tuner.committed() if tuner else None,
+        "decode_steps": engine.steps,
+        "generated_tokens": summary["generated_tokens"],
+        "tokens_per_s": summary["tokens_per_s"],
+        "mean_ttft_s": summary["ttft_s"]["mean"],
+        "p50_ttft_s": summary["ttft_s"]["p50"],
+        "p99_ttft_s": summary["ttft_s"]["p99"],
+        "p50_itl_s": summary["itl_s"]["p50"],
+        "p99_itl_s": summary["itl_s"]["p99"],
+        "wall_s": summary["wall_s"],
+        "preemptions": summary["preemptions"],
+        "cache": engine.kv.stats(),
+        "committed_buckets": tuner.committed_params() if tuner else None,
     }
 
 
@@ -84,6 +116,15 @@ def main() -> None:
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--cache", choices=("dense", "paged"), default="dense",
+                    help="KV backend: dense lanes or paged block pool")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged: physical page count (default: lane parity)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per KV page")
+    ap.add_argument("--timeslice", type=int, default=None,
+                    help="preempt a lane after N decode steps when work is "
+                         "queued (serve more requests than lanes)")
     ap.add_argument("--autotune", action="store_true",
                     help="run-time AT over decode buckets (repro.at)")
     ap.add_argument("--workdir", default=".",
@@ -92,11 +133,19 @@ def main() -> None:
     out = serve(arch=args.arch, n_requests=args.requests,
                 n_lanes=args.lanes, max_len=args.max_len,
                 max_new=args.max_new, autotune=args.autotune,
-                workdir=args.workdir)
+                workdir=args.workdir, cache=args.cache,
+                n_pages=args.pages, page_size=args.page_size,
+                timeslice=args.timeslice)
+    def fmt(x, spec):
+        return format(x, spec) if x is not None else "n/a"
+
     print(f"[serve] {out['finished']}/{out['requests']} requests, "
           f"{out['generated_tokens']} tokens in {out['wall_s']:.1f}s "
           f"({out['tokens_per_s']:.1f} tok/s, "
-          f"ttft {out['mean_ttft_s']:.2f}s)")
+          f"ttft p50 {fmt(out['p50_ttft_s'], '.3f')}s "
+          f"p99 {fmt(out['p99_ttft_s'], '.3f')}s, "
+          f"itl p50 {fmt(out['p50_itl_s'], '.4f')}s, "
+          f"preemptions {out['preemptions']})")
 
 
 if __name__ == "__main__":

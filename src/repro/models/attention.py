@@ -113,6 +113,46 @@ def decode(p: dict, x: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     return out @ p["wo"], cache_k, cache_v
 
 
+def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
+                 v_pool: jax.Array, page_table: jax.Array,
+                 pos: jax.Array, cfg: AttnConfig):
+    """One-token decode against a paged KV cache.
+
+    x: (B, 1, d); pools (P, Hkv, psz, Dh) are shared by every sequence,
+    ``page_table`` (B, nblk) maps logical KV blocks to physical pages (the
+    allocator guarantees pages are lane-exclusive, so the scatter below
+    cannot race between lanes).  The new token's KV lands in page
+    ``table[b, pos // psz]`` at slot ``pos % psz``.  Sliding-window archs
+    are not supported on this path (their ring buffer is already O(W)).
+    """
+    assert cfg.window is None, "paged decode does not support SWA archs"
+    b, one, _ = x.shape
+    psz = k_pool.shape[2]
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None])
+    phys = jnp.take_along_axis(page_table, (pos // psz)[:, None],
+                               axis=1)[:, 0]                      # (B,)
+    slot = pos % psz
+    pidx = phys[:, None, None, None]
+    hidx = jnp.arange(cfg.n_kv_heads)[None, :, None, None]
+    sidx = slot[:, None, None, None]
+    didx = jnp.arange(cfg.d_head)[None, None, None, :]
+    k_pool = k_pool.at[pidx, hidx, sidx, didx].set(
+        k[:, :, :1, :].astype(k_pool.dtype))
+    v_pool = v_pool.at[pidx, hidx, sidx, didx].set(
+        v[:, :, :1, :].astype(v_pool.dtype))
+    kv_len = (pos + 1).astype(jnp.int32)
+    out = ops.paged_decode_attention(q, k_pool, v_pool, page_table, kv_len)
+    out = out.transpose(0, 2, 1, 3).reshape(b, one, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], k_pool, v_pool
+
+
+def init_paged_pool(n_pages: int, cfg: AttnConfig, page_size: int,
+                    dtype=jnp.bfloat16):
+    """Physical page pool for one layer: (P, Hkv, psz, Dh) k and v."""
+    shape = (n_pages, cfg.n_kv_heads, page_size, cfg.d_head)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
 def init_cross_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
     return init_attention(key, cfg, dtype)
 

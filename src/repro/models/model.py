@@ -64,6 +64,22 @@ class Model:
         return jax.eval_shape(
             functools.partial(self.init_caches, batch, max_len))
 
+    # -- paged KV (serving) ------------------------------------------------
+    @property
+    def supports_paged_cache(self) -> bool:
+        return (not self.cfg.is_encoder_decoder
+                and transformer.supports_paged_cache(self.cfg))
+
+    def init_paged_caches(self, n_pages: int, page_size: int, dtype=None):
+        if self.cfg.is_encoder_decoder:
+            raise ValueError("paged KV cache is decoder-only")
+        return transformer.init_paged_caches(self.cfg, n_pages, page_size,
+                                             dtype)
+
+    def paged_decode_step(self, params, caches, page_table, token, pos):
+        return transformer.paged_decode_step(params, caches, page_table,
+                                             token, pos, self.cfg)
+
     # -- dry-run input stand-ins ------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> dict:
         """ShapeDtypeStruct inputs for the given shape's step function."""

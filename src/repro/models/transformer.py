@@ -303,6 +303,72 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int,
     return caches
 
 
+def supports_paged_cache(cfg: ArchConfig) -> bool:
+    """Paged KV applies to plain attention stacks: SSM state is O(1) and
+    SWA ring buffers are already O(window), so neither benefits from
+    paging; the zamba2 shared-attn block would need a second page space."""
+    return (cfg.layer_kinds()[0] in ("attn_mlp", "attn_moe")
+            and cfg.attn_period == 0 and cfg.window is None)
+
+
+def init_paged_caches(cfg: ArchConfig, n_pages: int, page_size: int,
+                      dtype=None) -> Any:
+    """Layer-stacked physical page pools: ``kv`` = (L, P, Hkv, psz, Dh) x2.
+
+    Unlike :func:`init_caches` this allocates O(n_pages * page_size)
+    tokens of KV *total*, not O(batch * max_len) — lanes borrow pages from
+    the shared pool via their page tables.
+    """
+    if not supports_paged_cache(cfg):
+        raise ValueError(
+            f"arch {cfg.name!r} does not support the paged KV cache "
+            "(needs a plain attention stack: no SSM/SWA/shared-attn)")
+    dtype = jnp.dtype(cfg.cache_dtype) if dtype is None else dtype
+    k, v = attn.init_paged_pool(n_pages, attn_config(cfg), page_size, dtype)
+    l = cfg.n_layers
+    stack = lambda a: jnp.broadcast_to(a, (l,) + a.shape).copy()
+    return {"kv": (stack(k), stack(v))}
+
+
+def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
+                      token: jax.Array, pos: jax.Array, cfg: ArchConfig):
+    """One decode step over paged caches.
+
+    token (B, 1) int32, pos (B,) int32, page_table (B, nblk) int32 shared
+    by every layer (one logical->physical mapping per sequence; each layer
+    has its own physical pool).  Returns (logits (B, V), caches).
+    """
+    x = jnp.take(params["embed"], token, axis=0)
+    x = _compute(x, cfg)
+    kind = cfg.layer_kinds()[0]
+    acfg = attn_config(cfg)
+
+    def body(carry, scanned):
+        x, = carry
+        lp = scanned["params"]
+        kp, vp = scanned["kv"]
+        h, kp, vp = attn.paged_decode(lp["attn"], _norm(cfg, lp, x, "norm1"),
+                                      kp, vp, page_table, pos, acfg)
+        x = x + h
+        h2 = _norm(cfg, lp, x, "norm2")
+        if kind == "attn_mlp":
+            x = x + _mlp_apply(lp["mlp"], h2, cfg)
+        else:
+            out, _ = moe_mod.apply_moe(lp["moe"], h2, moe_config(cfg))
+            x = x + out
+        return (x,), {"kv": (kp, vp)}
+
+    scanned_in = {"params": _cast_tree(params["layers"], cfg),
+                  "kv": caches["kv"]}
+    (x,), new_states = jax.lax.scan(body, (x,), scanned_in)
+    x = _norm(cfg, _cast_tree(
+        {k: params[k] for k in params if k.startswith("final_norm")}, cfg),
+        x, "final_norm")
+    w = _compute(lm_head_weight(params, cfg), cfg)
+    logits = (x[:, 0] @ w).astype(jnp.float32)
+    return logits, {"kv": new_states["kv"]}
+
+
 def decode_step(params: dict, caches: Any, token: jax.Array,
                 pos: jax.Array, cfg: ArchConfig):
     """token (B, 1) int32, pos (B,) int32 -> (logits (B, V), caches)."""

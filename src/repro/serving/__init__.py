@@ -1,2 +1,18 @@
+"""Serving stack: scheduler-driven continuous batching over a paged or
+dense KV cache, with run-time AT decode dispatch.
+
+Layers (see ``docs/SERVING.md``):
+
+* :mod:`.scheduler` — FIFO admission + preemptive continuous batching;
+* :mod:`.kvcache` — ``DenseKVCache`` / ``PagedKVCache`` backends;
+* :mod:`.metrics` — TTFT / inter-token latency / throughput aggregation;
+* :mod:`.engine` — the orchestrator tying them to the model's decode step.
+"""
 from .engine import LaneState, Request, ServingEngine, length_bucket
-__all__ = ["ServingEngine", "Request", "LaneState", "length_bucket"]
+from .kvcache import DenseKVCache, PagedKVCache, make_kv_cache
+from .metrics import ServingMetrics
+from .scheduler import Scheduler
+
+__all__ = ["ServingEngine", "Request", "LaneState", "length_bucket",
+           "DenseKVCache", "PagedKVCache", "make_kv_cache", "Scheduler",
+           "ServingMetrics"]

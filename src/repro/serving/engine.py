@@ -1,49 +1,37 @@
-"""Serving engine: continuous batching over fixed decode lanes.
+"""Serving engine: the orchestration layer of the serving stack.
 
-The production pattern: a fixed-shape decode step (jit-compiled once) over
-``n_lanes`` sequences; prefill fills a free lane, finished lanes are
-recycled mid-flight (continuous batching).  Run-time auto-tuning hooks in
-at two points (tuning/dynamic.py):
+The engine wires four components together and owns none of their policy:
 
-* decode-kernel variant per *sequence-length bucket* — a ``dynamic select``
-  AT region chooses e.g. flash-decode block size / layout per bucket, the
-  paper's Sample 6/7 pattern applied to serving;
-* prefill chunking for long prompts.
+* :mod:`~repro.serving.scheduler` — FIFO admission queues + preemption
+  decisions (continuous batching over fixed decode lanes);
+* :mod:`~repro.serving.kvcache` — the KV backend: ``dense`` per-lane
+  strips or ``paged`` block allocation with host swap;
+* :mod:`~repro.serving.metrics` — TTFT / inter-token latency / throughput
+  aggregation over finished requests;
+* the decode dispatch — a jit'd fixed-shape decode step, optionally routed
+  through a :class:`~repro.tuning.dynamic.DecodeAutoTuner` whose
+  per-length-bucket ``dynamic select`` regions pick the decode variant at
+  run time (the paper's Sample 6/7 pattern applied to serving).
 
-Caches are stacked (L, lanes, ...); per-lane writes use
-``jax.tree.map`` + indexed updates so lane recycling never re-compiles.
+With the paged backend the engine *serves* more concurrent requests than
+it has decode lanes: queued work triggers time-slice preemption, the
+victim's pages are swapped to host memory, and the sequence later resumes
+by swap-in — no prefill re-run, bit-identical continuation.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ArchConfig
-from ..models import Model
+from .kvcache import PagedKVCache, make_kv_cache
+from .metrics import ServingMetrics
+from .scheduler import LaneState, Request, Scheduler
 
-
-@dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new_tokens: int = 16
-    out_tokens: list[int] = field(default_factory=list)
-    done: bool = False
-    submit_t: float = field(default_factory=time.time)
-    first_token_t: float | None = None
-    finish_t: float | None = None
-
-
-@dataclass
-class LaneState:
-    rid: int | None = None
-    pos: int = 0
-    remaining: int = 0
+__all__ = ["ServingEngine", "Request", "LaneState", "length_bucket"]
 
 
 def length_bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
@@ -54,119 +42,174 @@ def length_bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
 
 
 class ServingEngine:
-    def __init__(self, model: Model, params, n_lanes: int = 4,
+    def __init__(self, model, params, n_lanes: int = 4,
                  max_len: int = 512, eos_id: int | None = None,
                  decode_fn: Callable | None = None,
                  prefill_fn: Callable | None = None,
-                 greedy: bool = True, autotuner=None):
+                 greedy: bool = True, autotuner=None,
+                 cache: str = "dense", n_pages: int | None = None,
+                 page_size: int = 16, timeslice: int | None = None):
         self.model = model
         self.params = params
         self.n_lanes = n_lanes
         self.max_len = max_len
         self.eos_id = eos_id
-        self.lanes = [LaneState() for _ in range(n_lanes)]
-        self.caches = model.init_caches(n_lanes, max_len)
-        self.queue: list[Request] = []
-        self.active: dict[int, Request] = {}
-        self.finished: list[Request] = []
-        self._decode = decode_fn or jax.jit(model.decode_step)
+        self.kv = make_kv_cache(model, cache, n_lanes, max_len,
+                                n_pages=n_pages, page_size=page_size)
+        self.scheduler = Scheduler(n_lanes, timeslice=timeslice)
+        self.metrics = ServingMetrics()
+        step_fn = model.paged_decode_step if self.kv.kind == "paged" \
+            else model.decode_step
+        self._decode = decode_fn or jax.jit(step_fn)
         self._prefill = prefill_fn or jax.jit(
             model.prefill, static_argnums=(3,))
         # run-time AT hook (repro.at): a tuning/dynamic.DecodeAutoTuner
         # routing each decode step through the per-bucket dynamic select
         # region; None keeps the plain jit'd decode path.
         self.autotuner = autotuner
+        self.active: dict[int, Request] = {}
+        self.finished: list[Request] = []
         self.steps = 0
+
+    # -- compat views -------------------------------------------------------
+    @property
+    def lanes(self) -> list[LaneState]:
+        return self.scheduler.lanes
+
+    @property
+    def queue(self):
+        return self.scheduler.waiting
+
+    @property
+    def caches(self):
+        return self.kv.caches
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.scheduler.submit(req)
+
+    def _finish(self, lane_id: int, req: Request, now: float) -> None:
+        req.done = True
+        req.finish_t = now
+        self.finished.append(req)
+        self.metrics.observe(req)
+        self.active.pop(req.rid, None)
+        self.kv.release(lane_id)
+        self.scheduler.vacate(lane_id)
+
+    def _is_eos(self, tok: int) -> bool:
+        """Explicit EOS guard: ``eos_id=0`` is a valid stop token and
+        ``eos_id=None`` disables EOS stopping entirely."""
+        return self.eos_id is not None and tok == self.eos_id
+
+    def _preempt_lane(self, lane_id: int, priority: bool = False) -> None:
+        lane = self.scheduler.lanes[lane_id]
+        req = self.active.pop(lane.rid)
+        handle = self.kv.swap_out(lane_id)
+        self.scheduler.preempt(lane_id, req, handle, priority=priority)
 
     def _admit(self) -> None:
-        for lane_id, lane in enumerate(self.lanes):
-            if lane.rid is not None or not self.queue:
+        for lane_id in self.scheduler.free_lanes():
+            nxt = self.scheduler.next_admission()
+            if nxt is None:
+                return
+            kind, item = nxt
+            if kind == "resume":
+                if not self.kv.swap_in(lane_id, item.handle):
+                    self.scheduler.push_back(kind, item)
+                    return                 # no pages yet; retry next step
+                self.scheduler.occupy(lane_id, item.req, item.pos,
+                                      item.remaining)
+                self.active[item.req.rid] = item.req
                 continue
-            req = self.queue.pop(0)
+            req = item
+            if isinstance(self.kv, PagedKVCache) \
+                    and not self.kv.can_admit(len(req.prompt)):
+                self.scheduler.push_back(kind, req)
+                return                     # page pressure; stay queued
+            plen = self.kv.prefill_len(len(req.prompt))
             logits, cache1 = self._prefill(
                 self.params, jnp.asarray([req.prompt], jnp.int32),
-                None, self.max_len)
-            # splice the single-sequence cache into this lane
-            self.caches = jax.tree.map(
-                lambda full, one: _lane_set(full, one, lane_id),
-                self.caches, cache1)
+                None, plen)
+            if not self.kv.admit(lane_id, cache1, len(req.prompt)):
+                self.scheduler.push_back(kind, req)
+                return
             tok = int(jnp.argmax(logits[0]))
+            now = time.time()
             req.out_tokens.append(tok)
-            req.first_token_t = time.time()
-            lane.rid = req.rid
-            lane.pos = len(req.prompt)
-            lane.remaining = req.max_new_tokens - 1
+            req.first_token_t = now
+            req.token_ts.append(now)
+            self.scheduler.occupy(lane_id, req, len(req.prompt),
+                                  req.max_new_tokens - 1)
             self.active[req.rid] = req
+            if req.max_new_tokens <= 1 or self._is_eos(tok):
+                self._finish(lane_id, req, now)
+
+    def _ensure_capacity(self) -> None:
+        """Pre-decode page check: every active lane must own the page its
+        next token writes to; a lane that cannot allocate one is preempted
+        (its pages swap out, freeing room for the rest)."""
+        for lane_id in self.scheduler.active_lanes():
+            lane = self.scheduler.lanes[lane_id]
+            if self.kv.ensure_capacity(lane_id, lane.pos):
+                continue
+            if len(self.active) == 1:
+                raise RuntimeError(
+                    f"page pool too small: sequence {lane.rid} needs "
+                    f"another page at pos {lane.pos} and no other lane "
+                    "can be evicted")
+            self._preempt_lane(lane_id, priority=True)
 
     # -- one decode step over all lanes -------------------------------------
     def step(self) -> None:
+        victim = self.scheduler.pick_victim()
+        if victim is not None:
+            self._preempt_lane(victim)
         self._admit()
+        self._ensure_capacity()
         if not self.active:
             return
         token = np.zeros((self.n_lanes, 1), np.int32)
         pos = np.zeros((self.n_lanes,), np.int32)
-        for i, lane in enumerate(self.lanes):
+        for i, lane in enumerate(self.scheduler.lanes):
             if lane.rid is not None:
                 req = self.active[lane.rid]
                 token[i, 0] = req.out_tokens[-1]
                 pos[i] = lane.pos
+        args = (self.params, self.kv.caches, *self.kv.decode_extra(),
+                jnp.asarray(token), jnp.asarray(pos))
         if self.autotuner is not None:
             kv_len = int(pos.max()) + 1
-            logits, self.caches = self.autotuner.decode(
-                kv_len, self.params, self.caches, jnp.asarray(token),
-                jnp.asarray(pos))
+            logits, new_caches = self.autotuner.decode(kv_len, *args)
         else:
-            logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(token),
-                jnp.asarray(pos))
+            logits, new_caches = self._decode(*args)
+        self.kv.caches = new_caches
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        now = time.time()
         self.steps += 1
-        for i, lane in enumerate(self.lanes):
+        for i, lane in enumerate(self.scheduler.lanes):
             if lane.rid is None:
                 continue
             req = self.active[lane.rid]
             tok = int(nxt[i])
             req.out_tokens.append(tok)
+            req.token_ts.append(now)
             lane.pos += 1
             lane.remaining -= 1
-            if lane.remaining <= 0 or tok == self.eos_id \
+            lane.steps_served += 1
+            if lane.remaining <= 0 or self._is_eos(tok) \
                     or lane.pos >= self.max_len - 1:
-                req.done = True
-                req.finish_t = time.time()
-                self.finished.append(req)
-                del self.active[lane.rid]
-                self.lanes[i] = LaneState()
+                self._finish(i, req, now)
 
     def run(self, max_steps: int = 1000) -> list[Request]:
-        while (self.queue or self.active) and self.steps < max_steps:
+        while (self.scheduler.has_queued or self.active) \
+                and self.steps < max_steps:
+            steps_before, done_before = self.steps, len(self.finished)
             self.step()
+            if not self.active and self.scheduler.has_queued \
+                    and self.steps == steps_before \
+                    and len(self.finished) == done_before:
+                raise RuntimeError(
+                    "admission stalled: queued work cannot obtain a lane "
+                    "or pages (page pool smaller than one sequence?)")
         return self.finished
-
-
-def _lane_set(full: jax.Array, one: jax.Array, lane: int) -> jax.Array:
-    """Write a batch-1 cache leaf into lane ``lane`` of the stacked cache.
-
-    Leaves are (L, B, ...) (layer-stacked) or (napp, B, ...); the batch
-    axis is axis 1.
-    """
-    if one.shape[1] == full.shape[1]:      # already full-width (rare)
-        return one.astype(full.dtype)
-    src = one[:, 0]
-    # pad/crop trailing dims (prefill cache len == prompt len)
-    dst_shape = full.shape[2:]
-    pads = []
-    slices = [slice(None)] * src.ndim
-    for i, (s, d) in enumerate(zip(src.shape[1:], dst_shape)):
-        if s < d:
-            pads.append((0, d - s))
-        else:
-            pads.append((0, 0))
-            slices[i + 1] = slice(0, d)
-    src = src[tuple(slices)]
-    if any(p != (0, 0) for p in pads):
-        src = jnp.pad(src, [(0, 0)] + pads)
-    return full.at[:, lane].set(src.astype(full.dtype))

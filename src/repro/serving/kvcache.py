@@ -1,0 +1,273 @@
+"""KV-cache backends for the serving engine: dense lanes and paged blocks.
+
+Two implementations of one interface:
+
+* :class:`DenseKVCache` — the classic layout: every decode lane owns a
+  contiguous ``max_len`` strip in a stacked ``(L, n_lanes, ...)`` cache.
+  Memory is O(n_lanes * max_len) regardless of how many tokens are live.
+* :class:`PagedKVCache` — vLLM-style paging: a shared physical pool of
+  ``n_pages`` pages of ``page_size`` tokens each (per layer), with a
+  per-lane page table mapping logical KV blocks to physical pages.
+  Memory scales with *live tokens* (rounded up to page granularity), lane
+  admission is page allocation instead of a pad/crop splice, and a
+  preempted sequence's pages can be swapped out to host memory and later
+  swapped back in without re-running prefill.
+
+Page 0 of the pool is reserved as a *null page*: idle lanes decode with
+``pos = 0`` and a zeroed page-table row, so their (discarded) KV writes
+land there and can never corrupt a live sequence.
+
+The engine talks to both backends through the same methods::
+
+    admit(lane, prefill_caches, prompt_len) -> bool
+    ensure_capacity(lane, pos) -> bool        # page alloc on boundary
+    swap_out(lane) -> handle                  # preemption
+    swap_in(lane, handle) -> bool
+    release(lane)
+    decode_extra() -> tuple                   # (page_table,) when paged
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NULL_PAGE = 0
+
+
+def _lane_set(full: jax.Array, one: jax.Array, lane: int) -> jax.Array:
+    """Write batch entry 0 of ``one`` into lane ``lane`` of the stacked
+    cache.
+
+    Leaves are (L, B, ...) (layer-stacked) or (napp, B, ...); the batch
+    axis is axis 1.  Only the target lane is ever written — even when the
+    source happens to be full-width — so concurrent lanes' state is never
+    clobbered.
+    """
+    src = one[:, 0]
+    # pad/crop trailing dims (prefill cache len == prompt len)
+    dst_shape = full.shape[2:]
+    pads = []
+    slices = [slice(None)] * src.ndim
+    for i, (s, d) in enumerate(zip(src.shape[1:], dst_shape)):
+        if s < d:
+            pads.append((0, d - s))
+        else:
+            pads.append((0, 0))
+            slices[i + 1] = slice(0, d)
+    src = src[tuple(slices)]
+    if any(p != (0, 0) for p in pads):
+        src = jnp.pad(src, [(0, 0)] + pads)
+    return full.at[:, lane].set(src.astype(full.dtype))
+
+
+class DenseKVCache:
+    """Per-lane contiguous KV strips (the pre-paging layout)."""
+
+    kind = "dense"
+
+    def __init__(self, model, n_lanes: int, max_len: int):
+        self.n_lanes = n_lanes
+        self.max_len = max_len
+        self.caches = model.init_caches(n_lanes, max_len)
+
+    # -- engine interface ---------------------------------------------------
+    def prefill_len(self, prompt_len: int) -> int:
+        return self.max_len
+
+    def admit(self, lane: int, prefill_caches: Any, prompt_len: int) -> bool:
+        self.caches = jax.tree.map(
+            lambda full, one: _lane_set(full, one, lane),
+            self.caches, prefill_caches)
+        return True
+
+    def ensure_capacity(self, lane: int, pos: int) -> bool:
+        return pos < self.max_len
+
+    def release(self, lane: int) -> None:
+        pass
+
+    def swap_out(self, lane: int) -> Any:
+        handle = jax.tree.map(lambda a: np.asarray(a[:, lane]), self.caches)
+        return handle
+
+    def swap_in(self, lane: int, handle: Any) -> bool:
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, lane].set(
+                jnp.asarray(one).astype(full.dtype)),
+            self.caches, handle)
+        return True
+
+    def decode_extra(self) -> tuple:
+        return ()
+
+    # -- accounting ---------------------------------------------------------
+    def cache_tokens(self) -> int:
+        """Token capacity held in device memory (fixed for dense)."""
+        return self.n_lanes * self.max_len
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "cache_tokens": self.cache_tokens()}
+
+
+@dataclass
+class PageHandle:
+    """Host-side copy of a swapped-out sequence's pages."""
+
+    chunks: Any          # pytree of np arrays, page axis at position 1
+    n_blocks: int
+
+
+class PagedKVCache:
+    """Block/paged KV cache with a free-page pool and host swap space.
+
+    ``n_pages`` pages of ``page_size`` tokens (per layer) back every lane;
+    a lane's logical block *b* lives in physical page ``table[lane, b]``.
+    Pages are lane-exclusive while allocated, so the decode step's scatter
+    can never race between lanes.
+    """
+
+    kind = "paged"
+
+    def __init__(self, model, n_lanes: int, max_len: int, n_pages: int,
+                 page_size: int = 16):
+        if not model.supports_paged_cache:
+            raise ValueError(
+                f"arch {model.cfg.name!r} does not support the paged KV "
+                "cache; use cache='dense'")
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.n_lanes = n_lanes
+        self.max_len = max_len
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_blocks = math.ceil(max_len / page_size)
+        self.caches = model.init_paged_caches(n_pages, page_size)
+        self.table = np.zeros((n_lanes, self.max_blocks), np.int32)
+        self.n_blocks = [0] * n_lanes
+        # page 0 is the null page (idle-lane write sink), never allocated
+        self._free = list(range(n_pages - 1, 0, -1))
+        self.swap_outs = 0
+        self.swap_ins = 0
+
+    # -- page pool ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def _alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def _free_lane(self, lane: int) -> None:
+        nblk = self.n_blocks[lane]
+        self._free.extend(int(p) for p in self.table[lane, :nblk])
+        self.table[lane, :] = NULL_PAGE
+        self.n_blocks[lane] = 0
+
+    # -- engine interface ---------------------------------------------------
+    def prefill_len(self, prompt_len: int) -> int:
+        """Page-aligned prefill cache length (tight, not max_len)."""
+        return math.ceil(prompt_len / self.page_size) * self.page_size
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return math.ceil(prompt_len / self.page_size) <= len(self._free)
+
+    def admit(self, lane: int, prefill_caches: Any, prompt_len: int) -> bool:
+        nblk = math.ceil(prompt_len / self.page_size)
+        pages = self._alloc(nblk)
+        if pages is None:
+            return False
+        arr = np.asarray(pages, np.int32)
+
+        def scatter(pool, dense):
+            # dense: (L, 1, Hkv, nblk*psz, D) -> (L, nblk, Hkv, psz, D)
+            l, _, hkv, s, d = dense.shape
+            chunks = dense[:, 0].reshape(
+                l, hkv, nblk, self.page_size, d).transpose(0, 2, 1, 3, 4)
+            return pool.at[:, arr].set(chunks.astype(pool.dtype))
+
+        self.caches = jax.tree.map(scatter, self.caches, prefill_caches)
+        self.table[lane, :nblk] = arr
+        self.n_blocks[lane] = nblk
+        return True
+
+    def ensure_capacity(self, lane: int, pos: int) -> bool:
+        """Make sure the page holding ``pos`` is allocated (called before
+        every decode step; allocation happens on page-boundary crossings)."""
+        if pos >= self.max_len:
+            return False
+        blk = pos // self.page_size
+        if blk < self.n_blocks[lane]:
+            return True
+        page = self._alloc(1)
+        if page is None:
+            return False
+        self.table[lane, blk] = page[0]
+        self.n_blocks[lane] = blk + 1
+        return True
+
+    def release(self, lane: int) -> None:
+        self._free_lane(lane)
+
+    def swap_out(self, lane: int) -> PageHandle:
+        nblk = self.n_blocks[lane]
+        pages = np.asarray(self.table[lane, :nblk], np.int32)
+        chunks = jax.tree.map(lambda pool: np.asarray(pool[:, pages]),
+                              self.caches)
+        self._free_lane(lane)
+        self.swap_outs += 1
+        return PageHandle(chunks=chunks, n_blocks=nblk)
+
+    def swap_in(self, lane: int, handle: PageHandle) -> bool:
+        pages = self._alloc(handle.n_blocks)
+        if pages is None:
+            return False
+        arr = np.asarray(pages, np.int32)
+        self.caches = jax.tree.map(
+            lambda pool, chunk: pool.at[:, arr].set(
+                jnp.asarray(chunk).astype(pool.dtype)),
+            self.caches, handle.chunks)
+        self.table[lane, :handle.n_blocks] = arr
+        self.table[lane, handle.n_blocks:] = NULL_PAGE
+        self.n_blocks[lane] = handle.n_blocks
+        self.swap_ins += 1
+        return True
+
+    def decode_extra(self) -> tuple:
+        return (jnp.asarray(self.table),)
+
+    # -- accounting ---------------------------------------------------------
+    def cache_tokens(self) -> int:
+        """Token capacity currently held by live sequences."""
+        return self.used_pages * self.page_size
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "page_size": self.page_size,
+                "n_pages": self.n_pages, "used_pages": self.used_pages,
+                "free_pages": self.free_pages,
+                "cache_tokens": self.cache_tokens(),
+                "swap_outs": self.swap_outs, "swap_ins": self.swap_ins}
+
+
+def make_kv_cache(model, cache: str, n_lanes: int, max_len: int,
+                  n_pages: int | None = None, page_size: int = 16):
+    """Build a KV-cache backend by name (``dense`` | ``paged``)."""
+    if cache == "dense":
+        return DenseKVCache(model, n_lanes, max_len)
+    if cache == "paged":
+        if n_pages is None:
+            # default pool: enough for every lane at full length (parity
+            # with dense), callers shrink it to see paging pay off
+            n_pages = n_lanes * math.ceil(max_len / page_size) + 1
+        return PagedKVCache(model, n_lanes, max_len, n_pages, page_size)
+    raise ValueError(f"unknown cache backend {cache!r}")

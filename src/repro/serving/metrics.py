@@ -1,0 +1,74 @@
+"""Serving metrics: TTFT, inter-token latency, throughput, percentiles.
+
+Collects per-request timing (submit / first token / per-token / finish)
+from finished :class:`~repro.serving.scheduler.Request` objects and
+aggregates the serving-latency quartet every inference stack reports:
+
+* **TTFT** — time to first token (queueing + prefill);
+* **ITL** — inter-token latency during decode;
+* **tokens/s** and **requests/s** over the serving window.
+
+p50/p99 come from ``numpy.percentile``; with CPU-proxy step counts the
+absolute numbers are placeholders, but the aggregation pipeline is the
+one the TPU path will feed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .scheduler import Request
+
+
+def _pcts(xs: list[float]) -> dict:
+    if not xs:
+        return {"p50": None, "p99": None, "mean": None}
+    arr = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "mean": float(arr.mean())}
+
+
+class ServingMetrics:
+    """Aggregates finished requests into a serving report."""
+
+    def __init__(self) -> None:
+        self.requests: list[Request] = []
+        self._t0: float | None = None
+        self._t1: float | None = None
+
+    def observe(self, req: Request) -> None:
+        self.requests.append(req)
+        if req.submit_t is not None:
+            self._t0 = req.submit_t if self._t0 is None \
+                else min(self._t0, req.submit_t)
+        if req.finish_t is not None:
+            self._t1 = req.finish_t if self._t1 is None \
+                else max(self._t1, req.finish_t)
+
+    # ------------------------------------------------------------------
+    def ttfts(self) -> list[float]:
+        return [r.first_token_t - r.submit_t for r in self.requests
+                if r.first_token_t is not None]
+
+    def inter_token_latencies(self) -> list[float]:
+        out: list[float] = []
+        for r in self.requests:
+            out.extend(float(b - a)
+                       for a, b in zip(r.token_ts, r.token_ts[1:]))
+        return out
+
+    def summary(self) -> dict:
+        n_tokens = sum(len(r.out_tokens) for r in self.requests)
+        wall = (self._t1 - self._t0) if (self._t0 is not None
+                                         and self._t1 is not None) else 0.0
+        preempts = sum(r.preemptions for r in self.requests)
+        return {
+            "requests": len(self.requests),
+            "generated_tokens": n_tokens,
+            "wall_s": wall,
+            "tokens_per_s": n_tokens / wall if wall > 0 else 0.0,
+            "requests_per_s": len(self.requests) / wall if wall > 0 else 0.0,
+            "ttft_s": _pcts(self.ttfts()),
+            "itl_s": _pcts(self.inter_token_latencies()),
+            "preemptions": preempts,
+        }

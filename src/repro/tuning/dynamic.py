@@ -1,11 +1,17 @@
 """Run-time AT driver: serving-time variant selection per request bucket.
 
 The paper's ``dynamic select`` (Samples 6/7) applied to the decode path:
-each sequence-length bucket gets a dynamic AT region whose alternatives are
-decode implementations (kernel block sizes / layouts); the first calls in
-each bucket measure the candidates (run-time auto-tuning happens at the
-call site, §4.1), then the winner is committed and ``OAT_DynPerfThis``
-semantics apply — later calls run the optimised variant with no tuning.
+each sequence-length bucket gets a dynamic AT region whose alternatives
+are decode implementations; the first calls in each bucket measure the
+candidates (run-time auto-tuning happens at the call site, §4.1), then the
+winner is committed and ``OAT_DynPerfThis`` semantics apply — later calls
+run the optimised variant with no tuning.
+
+The BP space is (length bucket × block_k) for the dense decode kernel
+and, when ``page_sizes`` is given, the full (length bucket × block_k ×
+page_size) product for the paged path (arXiv 2312.05779's bucket-wise
+runtime re-selection, with the page-gather granularity as the second
+axis).
 
 Declared through the ``repro.at`` session: committed winners persist in
 the session's record store, so a restarted server starts every bucket
@@ -23,21 +29,33 @@ DEFAULT_BLOCK_KS = (256, 512, 1024)
 
 
 class DecodeAutoTuner:
-    """Per-bucket dynamic select over decode variants."""
+    """Per-bucket dynamic select over decode variants.
+
+    ``make_decode(block_k)`` — or ``make_decode(block_k, page_size)`` when
+    ``page_sizes`` is given — builds one decode callable per variant; the
+    region measures each candidate once and commits the fastest.
+    """
 
     def __init__(self, session: "at.AutoTuner | ATContext",
-                 make_decode: Callable[[int], Callable],
+                 make_decode: Callable[..., Callable],
                  buckets=(512, 2048, 8192, 32768),
-                 block_ks=DEFAULT_BLOCK_KS):
+                 block_ks=DEFAULT_BLOCK_KS,
+                 page_sizes=None):
         self.session = at.AutoTuner.for_context(session)
         self.ctx = self.session.ctx
         self.buckets = buckets
+        self.param_names = ("block_k",) if page_sizes is None \
+            else ("block_k", "page_size")
+        self.variants = [(bk,) for bk in block_ks] if page_sizes is None \
+            else [(bk, ps) for bk in block_ks for ps in page_sizes]
         self.regions = {}
         for b in buckets:
             name = f"DecodeBucket_{b}"
             sel = self.session.autotune("dynamic", "select", name=name)
-            for bk in block_ks:
-                sel.alternative(name=f"block_k={bk}")(make_decode(bk))
+            for var in self.variants:
+                label = ",".join(f"{k}={v}"
+                                 for k, v in zip(self.param_names, var))
+                sel.alternative(name=label)(make_decode(*var))
             self.regions[b] = sel.region
         self.session.run("dynamic",
                          [f"DecodeBucket_{b}" for b in buckets])
@@ -49,3 +67,11 @@ class DecodeAutoTuner:
     def committed(self) -> dict[int, int | None]:
         return {b: self.ctx.dynamic_state[f"DecodeBucket_{b}"].committed
                 for b in self.buckets}
+
+    def committed_params(self) -> dict[int, dict | None]:
+        """Committed winners decoded into PP assignments per bucket."""
+        out: dict[int, dict | None] = {}
+        for b, idx in self.committed().items():
+            out[b] = None if idx is None \
+                else dict(zip(self.param_names, self.variants[idx]))
+        return out

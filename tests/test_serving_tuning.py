@@ -153,3 +153,59 @@ class TestDynamicTuning:
         assert committed[2048] is None     # untouched bucket still tuning
         out = tuner.decode(300)
         assert out["bk"] in (256, 512)
+
+    def test_bucket_page_size_product_space(self, tmp_path):
+        """With page_sizes the BP space is (bucket x block_k x page_size)."""
+        from repro import at
+        from repro.tuning import DecodeAutoTuner
+        session = at.AutoTuner(str(tmp_path))
+
+        def make_decode(bk, ps):
+            return lambda: {"bk": bk, "ps": ps}
+
+        tuner = DecodeAutoTuner(session, make_decode, buckets=(512,),
+                                block_ks=(256, 512), page_sizes=(8, 16))
+        assert len(tuner.regions[512].subregions) == 4
+        for _ in range(4):                 # one call per candidate
+            tuner.decode(100)
+        pp = tuner.committed_params()[512]
+        assert pp["block_k"] in (256, 512) and pp["page_size"] in (8, 16)
+
+    def test_warm_restart_zero_tuning(self, tmp_path):
+        """Satellite: a second session on the same workdir starts with
+        every bucket committed and performs zero tuning-executor
+        invocations — only the committed winner variant ever runs."""
+        from repro import at
+        from repro.tuning import DecodeAutoTuner
+
+        def mk(calls):
+            def make_decode(bk):
+                def fn():
+                    calls.append(bk)
+                    return {"bk": bk}
+                return fn
+            return make_decode
+
+        calls1: list[int] = []
+        s1 = at.AutoTuner(str(tmp_path))
+        t1 = DecodeAutoTuner(s1, mk(calls1), buckets=(512, 2048),
+                             block_ks=(256, 512))
+        for _ in range(2):                 # measure both candidates
+            t1.decode(300)
+            t1.decode(1500)
+        assert all(v is not None for v in t1.committed().values())
+
+        calls2: list[int] = []
+        s2 = at.AutoTuner(str(tmp_path))   # fresh process, same workdir
+        t2 = DecodeAutoTuner(s2, mk(calls2), buckets=(512, 2048),
+                             block_ks=(256, 512))
+        # committed *before* any decode call, loaded from the record store
+        assert t2.committed() == t1.committed()
+        assert s2.executor_calls == 0
+        assert set(s2.warm_hits) >= {("dynamic", "DecodeBucket_512"),
+                                     ("dynamic", "DecodeBucket_2048")}
+        winners = {512: t1.committed()[512], 2048: t1.committed()[2048]}
+        blocks = {0: 256, 1: 512}
+        out = t2.decode(300)
+        assert out["bk"] == blocks[winners[512]]
+        assert calls2 == [blocks[winners[512]]]   # no re-measurement
