@@ -1,0 +1,169 @@
+"""Serving-bench regression gate: current run vs committed baseline.
+
+Compares two ``BENCH_serving.json`` payloads cell by cell (cells are
+keyed by arch x cache x workload x prefill_chunk) and fails when the
+current run regresses past the thresholds:
+
+* throughput (``tokens_per_s``) drops by more than ``--max-tps-drop``
+  (default 20%);
+* p99 TTFT (``ttft_p99_s``) rises by more than ``--max-ttft-rise``
+  (default 25%).
+
+An absolute TTFT slack (``--ttft-floor``, default 50 ms) absorbs
+scheduler jitter on cells whose TTFT is tiny: a rise only fails the gate
+when the current value also exceeds ``baseline + floor``.  Cells present
+in the baseline but missing from the current run fail the gate (a
+silently dropped cell is a regression too); extra current cells are
+reported but don't fail.
+
+Both payloads carry the run shape under ``config`` (stamped by
+``bench_serving.py``); the gate refuses to diff two benchmarks measured
+with different workloads (exit 2) — regenerate against the matching
+baseline instead of reading false regressions.  Committed baselines:
+
+* ``benchmarks/baselines/BENCH_serving_smoke.json`` — the CI smoke shape
+  (``--requests 4 --max-new 5``), diffed by the ``bench-compare`` step;
+* ``benchmarks/baselines/BENCH_serving.json`` — default flags, for local
+  full runs.
+
+Local usage (flags must match the baseline's shape)::
+
+    PYTHONPATH=src python -m benchmarks.bench_serving \
+        --out BENCH_serving.json --requests 4 --max-new 5
+    PYTHONPATH=src python -m benchmarks.compare \
+        benchmarks/baselines/BENCH_serving_smoke.json BENCH_serving.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def cell_key(row: dict) -> tuple:
+    return (
+        row.get("arch"),
+        row.get("cache"),
+        row.get("workload", "uniform"),
+        row.get("prefill_chunk"),
+    )
+
+
+def _fmt_key(key: tuple) -> str:
+    arch, cache, workload, chunk = key
+    mode = f"/chunk={chunk}" if chunk else ""
+    return f"{arch}:{cache}:{workload}{mode}"
+
+
+def load_payload(path: str) -> tuple[dict, dict[tuple, dict]]:
+    with open(path) as f:
+        payload = json.load(f)
+    cells = {cell_key(row): row for row in payload.get("results", [])}
+    return payload.get("config", {}), cells
+
+
+def config_mismatch(base_cfg: dict, cur_cfg: dict) -> list[str]:
+    """Workload-shape keys that differ (``repeats`` only affects noise,
+    not the measured workload, so it is exempt)."""
+    keys = (set(base_cfg) | set(cur_cfg)) - {"repeats"}
+    return sorted(k for k in keys if base_cfg.get(k) != cur_cfg.get(k))
+
+
+def compare(
+    baseline: dict[tuple, dict],
+    current: dict[tuple, dict],
+    max_tps_drop: float = 0.20,
+    max_ttft_rise: float = 0.25,
+    ttft_floor_s: float = 0.05,
+) -> list[str]:
+    """Return the list of failure messages (empty == gate passes)."""
+    failures: list[str] = []
+    for key, base in sorted(baseline.items(), key=lambda kv: str(kv[0])):
+        cur = current.get(key)
+        name = _fmt_key(key)
+        if cur is None:
+            failures.append(f"{name}: cell missing from current run")
+            continue
+        b_tps, c_tps = base.get("tokens_per_s"), cur.get("tokens_per_s")
+        if b_tps and c_tps is not None:
+            drop = (b_tps - c_tps) / b_tps
+            if drop > max_tps_drop:
+                failures.append(
+                    f"{name}: throughput dropped {drop:.0%} "
+                    f"({b_tps:.1f} -> {c_tps:.1f} tok/s; limit {max_tps_drop:.0%})"
+                )
+        b_ttft, c_ttft = base.get("ttft_p99_s"), cur.get("ttft_p99_s")
+        if b_ttft and c_ttft is not None and c_ttft > b_ttft + ttft_floor_s:
+            rise = (c_ttft - b_ttft) / b_ttft
+            if rise > max_ttft_rise:
+                failures.append(
+                    f"{name}: p99 TTFT rose {rise:.0%} "
+                    f"({b_ttft:.3f}s -> {c_ttft:.3f}s; limit {max_ttft_rise:.0%})"
+                )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_serving.json baseline")
+    ap.add_argument("current", help="freshly produced BENCH_serving.json")
+    ap.add_argument(
+        "--max-tps-drop",
+        type=float,
+        default=0.20,
+        help="max allowed fractional throughput drop",
+    )
+    ap.add_argument(
+        "--max-ttft-rise",
+        type=float,
+        default=0.25,
+        help="max allowed fractional p99-TTFT rise",
+    )
+    ap.add_argument(
+        "--ttft-floor",
+        type=float,
+        default=0.05,
+        help="absolute TTFT slack in seconds (jitter floor)",
+    )
+    args = ap.parse_args()
+
+    base_cfg, baseline = load_payload(args.baseline)
+    cur_cfg, current = load_payload(args.current)
+    mismatched = config_mismatch(base_cfg, cur_cfg)
+    if mismatched:
+        print(
+            "[bench-compare] ERROR: baseline and current were generated "
+            f"with different workload shapes (differing: "
+            f"{', '.join(mismatched)}); regenerate against the matching "
+            "baseline instead of reading false regressions"
+        )
+        sys.exit(2)
+    for key in sorted(set(current) - set(baseline), key=str):
+        print(f"[bench-compare] new cell (no baseline): {_fmt_key(key)}")
+
+    failures = compare(
+        baseline,
+        current,
+        args.max_tps_drop,
+        args.max_ttft_rise,
+        args.ttft_floor,
+    )
+    compared = len(set(baseline) & set(current))
+    if failures:
+        for msg in failures:
+            print(f"[bench-compare] FAIL {msg}")
+        print(
+            f"[bench-compare] {len(failures)} regression(s) across "
+            f"{compared} compared cell(s)"
+        )
+        sys.exit(1)
+    print(
+        f"[bench-compare] OK: {compared} cell(s) within thresholds "
+        f"(tps drop <= {args.max_tps_drop:.0%}, "
+        f"p99 TTFT rise <= {args.max_ttft_rise:.0%})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -10,12 +10,17 @@ Layout parameters (before-execute-time AT): which attention path (this
 kernel vs the jnp reference vs ring-SP) is selected per (arch x shape x
 mesh) — see tuning/static.py.
 
-Two kernels:
+The kernels:
 
 * :func:`flash_attention` — self-attention over (B, H, S, D) with causal
   and/or sliding-window masking and GQA head mapping (kv_head = h // G).
 * :func:`flash_decode` — one-token decode against a (B, Hkv, S, D) KV
   cache, blocked over S (FlashDecoding-style), fp32 LSE merge.
+* :func:`flash_paged_decode` — one-token decode against a paged KV cache
+  (scalar-prefetched page table, vLLM-style).
+* :func:`flash_paged_prefill` — one prompt *chunk* against a paged KV
+  cache: causal at absolute positions over the committed prefix plus the
+  chunk's own triangle (chunked-prefill serving path).
 """
 from __future__ import annotations
 
@@ -354,6 +359,137 @@ def flash_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
       qg, k_pool, v_pool)
     return out.reshape(b, h, 1, d)
+
+
+# --------------------------------------------------------------------------
+# paged prefill: one prompt chunk against a paged (block) KV cache
+# --------------------------------------------------------------------------
+
+
+def _paged_prefill_kernel(tbl_ref, start_ref, len_ref, q_ref, k_ref, v_ref,
+                          o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                          block_q: int, block_k: int, n_k: int):
+    b, iq, ik = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    q_start = start_ref[b] + iq * block_q     # absolute pos of q row 0
+    k_start = ik * block_k
+
+    # live iff some key in the tile is (a) committed and (b) causally
+    # visible to the *last* query row of the q tile
+    live = jnp.logical_and(k_start < kv_len,
+                           k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+        mask = (kj <= qi) & (kj < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "interpret"))
+def flash_paged_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_table: jax.Array, start: jax.Array,
+                        kv_len: jax.Array, *, block_q: int = 128,
+                        block_k: int | None = None,
+                        scale: float | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """Chunked-prefill attention over a paged KV cache.
+
+    q: (B, H, C, D) — one prompt chunk per sequence, first token at
+    absolute position ``start[b]``; pools (P, Hkv, psz, D); ``page_table``
+    (B, nblk) int32.  The chunk's KV must already be scattered into its
+    pages (write-before-read, same contract as the oracle); ``kv_len``
+    (B,) = ``start + chunk_len`` masks the valid key prefix.  Query rows
+    attend causally at *absolute* positions, so a chunk sees the whole
+    committed prefix plus its own lower triangle.
+
+    The page table and both scalar vectors are scalar-prefetched: each
+    grid step DMAs its (block_k, D) key tile straight from the owning
+    physical page — the committed prefix never materialises densely.
+
+    Performance parameters (the prefill region's run-time AT space):
+    ``block_q`` tiles the chunk, ``block_k`` the split-K tile *within* a
+    page (must divide ``page_size``; defaults to the whole page).
+    """
+    b, h, c, d = q.shape
+    n_pages, hkv, psz, _ = k_pool.shape
+    g = h // hkv
+    nblk = page_table.shape[1]
+    scale = float(scale if scale is not None else d ** -0.5)
+    bq = min(block_q, c)
+    pq = (-c) % bq
+    if pq:                       # pad the chunk to a whole q tile; padded
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))   # rows discard
+    cp = q.shape[2]
+    bk = min(block_k, psz) if block_k else psz
+    if psz % bk:
+        bk = psz                 # block must tile the page exactly
+    sub = psz // bk              # sub-blocks per page
+    grid = (b, h, cp // bq, nblk * sub)
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale,
+                               block_q=bq, block_k=bk, n_k=grid[3])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bb, hh, iq, ik, tbl, st, ln:
+                         (bb, hh, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+                         (tbl[bb, ik // s], hh // g, ik % s, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+                         (tbl[bb, ik // s], hh // g, ik % s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, hh, iq, ik, tbl, st, ln:
+                               (bb, hh, iq, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, cp, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), start.astype(jnp.int32),
+      kv_len.astype(jnp.int32), q, k_pool, v_pool)
+    return out[:, :, :c, :]
 
 
 def attention_vmem_bytes(block_q: int, block_k: int, d: int,

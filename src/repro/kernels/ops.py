@@ -18,7 +18,7 @@ from ..at.session import publish as _publish
 from ..at.session import tuned as _tuned
 from . import ref
 from .flash_attention import (flash_attention, flash_decode,
-                              flash_paged_decode)
+                              flash_paged_decode, flash_paged_prefill)
 from .matmul import matmul
 from .ssm_scan import selective_scan
 
@@ -100,6 +100,31 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, kv_len, *,
     kw = {k: v for k, v in kw.items() if k in ("block_k", "scale")}
     return flash_paged_decode(q, k_pool, v_pool, page_table, kv_len,
                               interpret=on_cpu(), **kw)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, page_table, start, kv_len, *,
+                            use_kernel: bool | None = None, **pps):
+    """Chunked-prefill attention over a paged KV cache (serving hot path).
+
+    One prompt chunk (q: (B, H, C, D), first token at absolute position
+    ``start``) attends causally to the committed prefix *plus* its own
+    lower triangle, reading keys straight from the physical pages.  The
+    chunk's KV must already be scattered into the pages (write before
+    read).  Tuned PPs published under ``flash_paged_prefill`` — the
+    serving prefill region tunes the (block_q x block_k) tile per prompt
+    bucket x chunk size — flow into the kernel call; on CPU the gather
+    oracle runs instead.
+    """
+    if use_kernel is None:
+        use_kernel = not on_cpu()
+    if not use_kernel:
+        return ref.paged_prefill_ref(q, k_pool, v_pool, page_table,
+                                     start, kv_len)
+    kw = tuned("flash_paged_prefill")
+    kw.update(pps)
+    kw = {k: v for k, v in kw.items() if k in ("block_q", "block_k", "scale")}
+    return flash_paged_prefill(q, k_pool, v_pool, page_table, start, kv_len,
+                               interpret=on_cpu(), **kw)
 
 
 def ssm_scan(x, dt, a, b, c, d, *, use_kernel: bool | None = None,

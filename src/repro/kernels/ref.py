@@ -78,6 +78,46 @@ def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return decode_ref(q, k, v, kv_len, scale)
 
 
+def paged_prefill_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                      page_table: jax.Array, start: jax.Array,
+                      kv_len: jax.Array,
+                      scale: float | None = None) -> jax.Array:
+    """Chunked-prefill attention oracle over a paged KV cache.
+
+    q: (B, H, C, D) — one prompt *chunk* whose first token sits at absolute
+    position ``start[b]``; pools (P, Hkv, psz, D); ``page_table`` (B, nblk)
+    maps logical KV blocks to physical pages.  The chunk's own KV must
+    already be scattered into the pages (the caller writes before it
+    reads), so key ``j`` is valid iff ``j < kv_len[b]``; query ``i``
+    (absolute position ``start[b] + i``) attends causally to keys at
+    absolute positions ``<= start[b] + i`` — i.e. the whole committed
+    prefix plus the chunk's own causal triangle.  Gathers the pages into a
+    dense (B, Hkv, nblk*psz, D) view, exactly like
+    :func:`paged_decode_ref`.
+    """
+    b, h, c, d = q.shape
+    _, hkv, psz, _ = k_pool.shape
+    nblk = page_table.shape[1]
+    g = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    k = k_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, nblk * psz, d)
+    v = v_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, nblk * psz, d)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qi = start[:, None] + jnp.arange(c)[None, :]          # (B, C) absolute
+    kj = jnp.arange(nblk * psz)[None, :]                  # (1, Sk)
+    mask = (kj[:, None, :] <= qi[..., None]) \
+        & (kj[:, None, :] < kv_len[:, None, None])        # (B, C, Sk)
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: int | None = None,
                       scale: float | None = None, block_q: int = 1024,

@@ -10,12 +10,16 @@ starts warm).
 ``--cache paged`` runs the paged-KV backend: memory scales with live
 tokens, and with ``--timeslice`` the engine serves more concurrent
 requests than it has decode lanes (preempted sequences' pages swap to
-host and back).
+host and back).  ``--prefill-chunk N`` adds chunked prefill: prompts
+stream into the paged cache N tokens per tick interleaved with decode,
+and the prefill tile space (block_q x block_k per prompt bucket) becomes
+a second run-time tuning region next to the decode buckets.
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8 \
-        --cache paged --pages 64 --page-size 16 --autotune --workdir /tmp/at
+        --cache paged --pages 64 --page-size 16 --prefill-chunk 8 \
+        --autotune --workdir /tmp/at
 """
 from __future__ import annotations
 
@@ -30,7 +34,8 @@ from ..models import build_model
 from ..serving import Request, ServingEngine
 
 
-def _make_autotuner(model, workdir: str, cache: str, page_size: int):
+def _make_autotuner(model, workdir: str, cache: str, page_size: int,
+                    prefill_chunk: int | None = None):
     """Per-bucket dynamic select over decode variants (repro.at session).
 
     Each candidate gets its own jit cache and publishes its block PPs
@@ -38,6 +43,10 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int):
     page-gather granularity at trace time (on CPU the reference path
     ignores them and the select exercises the paper's run-time measurement
     flow rather than a real kernel trade-off).
+
+    With chunked prefill the session also declares the prefill region
+    family: one select per (prompt bucket × chunk size) over the
+    ``flash_paged_prefill`` (block_q × block_k) tile space.
     """
     from ..tuning import DecodeAutoTuner
     session = at.AutoTuner(workdir)
@@ -54,9 +63,27 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int):
                 return decode_bk(p, caches, table, token, pos)
             return variant
 
-        return DecodeAutoTuner(session, make_decode,
-                               buckets=(128, 512, 2048),
-                               block_ks=(max(1, page_size // 2), page_size))
+        tuner = DecodeAutoTuner(session, make_decode,
+                                buckets=(128, 512, 2048),
+                                block_ks=(max(1, page_size // 2), page_size))
+        if prefill_chunk is not None:
+            def make_prefill(block_q, block_k):
+                prefill_jit = jax.jit(model.paged_prefill_step)
+
+                def variant(p, caches, table, tokens, start, kv_len,
+                            logit_idx, block_q=block_q, block_k=block_k):
+                    at.publish("flash_paged_prefill", block_q=block_q,
+                               block_k=block_k)
+                    return prefill_jit(p, caches, table, tokens, start,
+                                       kv_len, logit_idx)
+                return variant
+
+            tuner.add_prefill(
+                make_prefill, chunk_sizes=(prefill_chunk,),
+                buckets=(128, 512, 2048),
+                block_qs=(max(1, prefill_chunk // 2), prefill_chunk),
+                block_ks=(max(1, page_size // 2), page_size))
+        return tuner
 
     def make_decode(block_k):
         decode_bk = jax.jit(model.decode_step)
@@ -75,15 +102,18 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
           max_len: int = 96, prompt_len: int = 16, max_new: int = 12,
           seed: int = 0, autotune: bool = False, workdir: str = ".",
           cache: str = "dense", n_pages: int | None = None,
-          page_size: int = 16, timeslice: int | None = None) -> dict:
+          page_size: int = 16, timeslice: int | None = None,
+          prefill_chunk: int | None = None) -> dict:
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
-    tuner = _make_autotuner(model, workdir, cache, page_size) \
+    tuner = _make_autotuner(model, workdir, cache, page_size,
+                            prefill_chunk=prefill_chunk) \
         if autotune else None
     engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
                            autotuner=tuner, cache=cache, n_pages=n_pages,
-                           page_size=page_size, timeslice=timeslice)
+                           page_size=page_size, timeslice=timeslice,
+                           prefill_chunk=prefill_chunk)
     rng = np.random.default_rng(seed)
     for rid in range(n_requests):
         prompt = rng.integers(0, cfg.vocab_size,
@@ -104,8 +134,13 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         "p99_itl_s": summary["itl_s"]["p99"],
         "wall_s": summary["wall_s"],
         "preemptions": summary["preemptions"],
+        "prefill_chunks": engine.prefill_chunks,
         "cache": engine.kv.stats(),
         "committed_buckets": tuner.committed_params() if tuner else None,
+        "committed_prefill": (
+            {f"{b}_c{cs}": pp for (b, cs), pp
+             in tuner.committed_prefill_params().items()}
+            if tuner and tuner.prefill_regions else None),
     }
 
 
@@ -125,6 +160,10 @@ def main() -> None:
     ap.add_argument("--timeslice", type=int, default=None,
                     help="preempt a lane after N decode steps when work is "
                          "queued (serve more requests than lanes)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged: stream prompts in N-token chunks "
+                         "interleaved with decode (chunked prefill / "
+                         "continuous batching); default: monolithic")
     ap.add_argument("--autotune", action="store_true",
                     help="run-time AT over decode buckets (repro.at)")
     ap.add_argument("--workdir", default=".",
@@ -135,7 +174,7 @@ def main() -> None:
                 max_new=args.max_new, autotune=args.autotune,
                 workdir=args.workdir, cache=args.cache,
                 n_pages=args.pages, page_size=args.page_size,
-                timeslice=args.timeslice)
+                timeslice=args.timeslice, prefill_chunk=args.prefill_chunk)
     def fmt(x, spec):
         return format(x, spec) if x is not None else "n/a"
 

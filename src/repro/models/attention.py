@@ -146,6 +146,40 @@ def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
     return out @ p["wo"], k_pool, v_pool
 
 
+def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
+                  v_pool: jax.Array, page_table: jax.Array,
+                  start: jax.Array, kv_len: jax.Array, cfg: AttnConfig):
+    """One prompt *chunk* against a paged KV cache.
+
+    x: (B, C, d) — chunk tokens whose first token sits at absolute
+    position ``start[b]``; pools (P, Hkv, psz, Dh); ``page_table``
+    (B, nblk); ``kv_len`` (B,) = ``start + valid_chunk_len``.  RoPE runs
+    at absolute positions, the chunk's KV is scattered into its pages
+    (padded tail positions — ``pos >= kv_len`` — are redirected to the
+    null page 0 so ragged chunks can never corrupt live pages), then
+    attention runs over the committed prefix plus the chunk's causal
+    triangle.  Returns (out, k_pool, v_pool).
+    """
+    assert cfg.window is None, "paged prefill does not support SWA archs"
+    b, c, _ = x.shape
+    psz = k_pool.shape[2]
+    positions = start[:, None] + jnp.arange(c)[None, :]       # (B, C)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    phys = jnp.take_along_axis(page_table, positions // psz, axis=1)
+    phys = jnp.where(positions < kv_len[:, None], phys, 0)    # null-page sink
+    slot = positions % psz
+    pidx = phys[:, None, :, None]                             # (B, 1, C, 1)
+    hidx = jnp.arange(cfg.n_kv_heads)[None, :, None, None]
+    sidx = slot[:, None, :, None]
+    didx = jnp.arange(cfg.d_head)[None, None, None, :]
+    k_pool = k_pool.at[pidx, hidx, sidx, didx].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[pidx, hidx, sidx, didx].set(v.astype(v_pool.dtype))
+    out = ops.paged_prefill_attention(q, k_pool, v_pool, page_table,
+                                      start, kv_len)
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], k_pool, v_pool
+
+
 def init_paged_pool(n_pages: int, cfg: AttnConfig, page_size: int,
                     dtype=jnp.bfloat16):
     """Physical page pool for one layer: (P, Hkv, psz, Dh) k and v."""

@@ -80,6 +80,12 @@ class Model:
         return transformer.paged_decode_step(params, caches, page_table,
                                              token, pos, self.cfg)
 
+    def paged_prefill_step(self, params, caches, page_table, tokens,
+                           start, kv_len, logit_idx):
+        return transformer.paged_prefill_step(params, caches, page_table,
+                                              tokens, start, kv_len,
+                                              logit_idx, self.cfg)
+
     # -- dry-run input stand-ins ------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> dict:
         """ShapeDtypeStruct inputs for the given shape's step function."""

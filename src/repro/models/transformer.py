@@ -369,6 +369,56 @@ def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
     return logits, {"kv": new_states["kv"]}
 
 
+def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
+                       tokens: jax.Array, start: jax.Array,
+                       kv_len: jax.Array, logit_idx: jax.Array,
+                       cfg: ArchConfig):
+    """One prompt *chunk* of prefill over paged caches.
+
+    tokens (B, C) int32 — a fixed-size chunk (pad the ragged tail; padded
+    positions are masked by ``kv_len`` and their KV lands in the null
+    page), start (B,) int32 — absolute position of the chunk's first
+    token, kv_len (B,) = start + valid chunk length, page_table (B, nblk)
+    shared by every layer.  ``logit_idx`` (B,) selects the chunk row whose
+    logits are returned — the last valid prompt token on the final chunk
+    (what seeds decode); earlier chunks' logits are discarded by the
+    caller.  Returns (logits (B, V), caches).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _compute(x, cfg)
+    kind = cfg.layer_kinds()[0]
+    acfg = attn_config(cfg)
+
+    def body(carry, scanned):
+        x, = carry
+        lp = scanned["params"]
+        kp, vp = scanned["kv"]
+        h, kp, vp = attn.paged_prefill(lp["attn"],
+                                       _norm(cfg, lp, x, "norm1"),
+                                       kp, vp, page_table, start, kv_len,
+                                       acfg)
+        x = x + h
+        h2 = _norm(cfg, lp, x, "norm2")
+        if kind == "attn_mlp":
+            x = x + _mlp_apply(lp["mlp"], h2, cfg)
+        else:
+            out, _ = moe_mod.apply_moe(lp["moe"], h2, moe_config(cfg))
+            x = x + out
+        return (x,), {"kv": (kp, vp)}
+
+    scanned_in = {"params": _cast_tree(params["layers"], cfg),
+                  "kv": caches["kv"]}
+    (x,), new_states = jax.lax.scan(body, (x,), scanned_in)
+    x = _norm(cfg, _cast_tree(
+        {k: params[k] for k in params if k.startswith("final_norm")}, cfg),
+        x, "final_norm")
+    x_last = jnp.take_along_axis(
+        x, logit_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    w = _compute(lm_head_weight(params, cfg), cfg)
+    logits = (x_last @ w).astype(jnp.float32)
+    return logits, {"kv": new_states["kv"]}
+
+
 def decode_step(params: dict, caches: Any, token: jax.Array,
                 pos: jax.Array, cfg: ArchConfig):
     """token (B, 1) int32, pos (B,) int32 -> (logits (B, V), caches)."""

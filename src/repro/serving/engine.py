@@ -17,6 +17,13 @@ With the paged backend the engine *serves* more concurrent requests than
 it has decode lanes: queued work triggers time-slice preemption, the
 victim's pages are swapped to host memory, and the sequence later resumes
 by swap-in — no prefill re-run, bit-identical continuation.
+
+With ``prefill_chunk=N`` (paged only) prompts stream into the KV cache
+N tokens per scheduler tick instead of prefilling monolithically at
+admission: each tick runs one prefill chunk per mid-prefill lane, then
+one batched decode step over the decoding lanes — long prompts stop
+head-of-line-blocking short requests (chunked prefill / continuous
+batching; see docs/SERVING.md for the tick anatomy).
 """
 from __future__ import annotations
 
@@ -48,7 +55,8 @@ class ServingEngine:
                  prefill_fn: Callable | None = None,
                  greedy: bool = True, autotuner=None,
                  cache: str = "dense", n_pages: int | None = None,
-                 page_size: int = 16, timeslice: int | None = None):
+                 page_size: int = 16, timeslice: int | None = None,
+                 prefill_chunk: int | None = None):
         self.model = model
         self.params = params
         self.n_lanes = n_lanes
@@ -56,6 +64,11 @@ class ServingEngine:
         self.eos_id = eos_id
         self.kv = make_kv_cache(model, cache, n_lanes, max_len,
                                 n_pages=n_pages, page_size=page_size)
+        if prefill_chunk is not None and self.kv.kind != "paged":
+            raise ValueError(
+                "chunked prefill streams the prompt into the paged KV "
+                "cache; use cache='paged' (dense keeps monolithic prefill)")
+        self.prefill_chunk = prefill_chunk
         self.scheduler = Scheduler(n_lanes, timeslice=timeslice)
         self.metrics = ServingMetrics()
         step_fn = model.paged_decode_step if self.kv.kind == "paged" \
@@ -63,13 +76,18 @@ class ServingEngine:
         self._decode = decode_fn or jax.jit(step_fn)
         self._prefill = prefill_fn or jax.jit(
             model.prefill, static_argnums=(3,))
+        if prefill_chunk is not None:
+            self._prefill_step = jax.jit(model.paged_prefill_step)
         # run-time AT hook (repro.at): a tuning/dynamic.DecodeAutoTuner
         # routing each decode step through the per-bucket dynamic select
-        # region; None keeps the plain jit'd decode path.
+        # region (and, when chunked prefill is on, each prefill chunk
+        # through the per-(prompt-bucket x chunk) prefill region); None
+        # keeps the plain jit'd paths.
         self.autotuner = autotuner
         self.active: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.steps = 0
+        self.prefill_chunks = 0          # chunk-steps executed (chunked)
 
     # -- compat views -------------------------------------------------------
     @property
@@ -119,10 +137,22 @@ class ServingEngine:
                     self.scheduler.push_back(kind, item)
                     return                 # no pages yet; retry next step
                 self.scheduler.occupy(lane_id, item.req, item.pos,
-                                      item.remaining)
+                                      item.remaining, phase=item.phase)
                 self.active[item.req.rid] = item.req
                 continue
             req = item
+            if self.prefill_chunk is not None:
+                # chunked admission: the lane enters prefill phase with no
+                # compute — the prefill tick streams the prompt in chunk
+                # by chunk.  Gate on pages for the *first chunk* only.
+                first = min(self.prefill_chunk, len(req.prompt))
+                if not self.kv.can_admit(first):
+                    self.scheduler.push_back(kind, req)
+                    return                 # page pressure; stay queued
+                self.scheduler.occupy(lane_id, req, 0, req.max_new_tokens,
+                                      phase="prefill")
+                self.active[req.rid] = req
+                continue
             if isinstance(self.kv, PagedKVCache) \
                     and not self.kv.can_admit(len(req.prompt)):
                 self.scheduler.push_back(kind, req)
@@ -145,11 +175,65 @@ class ServingEngine:
             if req.max_new_tokens <= 1 or self._is_eos(tok):
                 self._finish(lane_id, req, now)
 
+    def _prefill_tick(self) -> None:
+        """One prefill chunk for every mid-prefill lane.
+
+        Each lane streams ``prefill_chunk`` prompt tokens into its paged
+        KV cache per tick (pages allocated chunk-granularly, the ragged
+        last chunk padded into the null page), so long prompts never
+        head-of-line-block the decode step that follows in the same tick.
+        The final chunk's last-valid-token logits seed decode — that is
+        the request's first token (TTFT stamps here).
+        """
+        if self.prefill_chunk is None:
+            return
+        c = self.prefill_chunk
+        for lane_id in self.scheduler.prefill_lanes():
+            lane = self.scheduler.lanes[lane_id]
+            req = self.active[lane.rid]
+            plen = len(req.prompt)
+            start, end = lane.pos, min(lane.pos + c, plen)
+            if not self.kv.ensure_tokens(lane_id, end):
+                if len(self.active) == 1:
+                    raise RuntimeError(
+                        f"page pool too small: sequence {lane.rid} needs "
+                        f"pages for prompt positions [{start}, {end}) and "
+                        "no other lane can be evicted")
+                self._preempt_lane(lane_id, priority=True)
+                continue
+            chunk = req.prompt[start:end] + [0] * (c - (end - start))
+            args = (self.params, self.kv.caches, self.kv.table_row(lane_id),
+                    jnp.asarray([chunk], jnp.int32),
+                    jnp.asarray([start], jnp.int32),
+                    jnp.asarray([end], jnp.int32),
+                    jnp.asarray([end - start - 1], jnp.int32))
+            if self.autotuner is not None \
+                    and getattr(self.autotuner, "prefill_regions", None):
+                logits, new_caches = self.autotuner.prefill(plen, c, *args)
+            else:
+                logits, new_caches = self._prefill_step(*args)
+            self.kv.caches = new_caches
+            self.prefill_chunks += 1
+            lane.pos = end
+            if end < plen:
+                continue                   # prompt still streaming in
+            tok = int(jnp.argmax(logits[0]))
+            now = time.time()
+            req.out_tokens.append(tok)
+            req.first_token_t = now
+            req.token_ts.append(now)
+            lane.phase = "decode"
+            lane.remaining = req.max_new_tokens - 1
+            if req.max_new_tokens <= 1 or self._is_eos(tok):
+                self._finish(lane_id, req, now)
+
     def _ensure_capacity(self) -> None:
-        """Pre-decode page check: every active lane must own the page its
+        """Pre-decode page check: every decoding lane must own the page its
         next token writes to; a lane that cannot allocate one is preempted
-        (its pages swap out, freeing room for the rest)."""
-        for lane_id in self.scheduler.active_lanes():
+        (its pages swap out, freeing room for the rest).  Mid-prefill lanes
+        are skipped — the prefill tick does its own chunk-granular
+        allocation."""
+        for lane_id in self.scheduler.decode_lanes():
             lane = self.scheduler.lanes[lane_id]
             if self.kv.ensure_capacity(lane_id, lane.pos):
                 continue
@@ -160,23 +244,30 @@ class ServingEngine:
                     "can be evicted")
             self._preempt_lane(lane_id, priority=True)
 
-    # -- one decode step over all lanes -------------------------------------
+    # -- one scheduler tick: prefill chunks + one decode step ---------------
     def step(self) -> None:
         victim = self.scheduler.pick_victim()
         if victim is not None:
             self._preempt_lane(victim)
         self._admit()
+        self._prefill_tick()
         self._ensure_capacity()
-        if not self.active:
+        decoding = self.scheduler.decode_lanes()
+        if not decoding:
             return
         token = np.zeros((self.n_lanes, 1), np.int32)
         pos = np.zeros((self.n_lanes,), np.int32)
-        for i, lane in enumerate(self.scheduler.lanes):
-            if lane.rid is not None:
-                req = self.active[lane.rid]
-                token[i, 0] = req.out_tokens[-1]
-                pos[i] = lane.pos
-        args = (self.params, self.kv.caches, *self.kv.decode_extra(),
+        for i in decoding:
+            lane = self.scheduler.lanes[i]
+            req = self.active[lane.rid]
+            token[i, 0] = req.out_tokens[-1]
+            pos[i] = lane.pos
+        # mid-prefill lanes ride along in the fixed-shape batched step with
+        # a zeroed page-table row: their dummy KV write lands in the null
+        # page, never in their live prefill pages
+        extra = self.kv.decode_extra(
+            mask_lanes=self.scheduler.prefill_lanes())
+        args = (self.params, self.kv.caches, *extra,
                 jnp.asarray(token), jnp.asarray(pos))
         if self.autotuner is not None:
             kv_len = int(pos.max()) + 1
@@ -187,9 +278,8 @@ class ServingEngine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         now = time.time()
         self.steps += 1
-        for i, lane in enumerate(self.scheduler.lanes):
-            if lane.rid is None:
-                continue
+        for i in decoding:
+            lane = self.scheduler.lanes[i]
             req = self.active[lane.rid]
             tok = int(nxt[i])
             req.out_tokens.append(tok)

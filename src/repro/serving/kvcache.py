@@ -21,10 +21,12 @@ The engine talks to both backends through the same methods::
 
     admit(lane, prefill_caches, prompt_len) -> bool
     ensure_capacity(lane, pos) -> bool        # page alloc on boundary
+    ensure_tokens(lane, n_tokens) -> bool     # chunk-granular growth
     swap_out(lane) -> handle                  # preemption
     swap_in(lane, handle) -> bool
     release(lane)
-    decode_extra() -> tuple                   # (page_table,) when paged
+    decode_extra(mask_lanes) -> tuple         # (page_table,) when paged;
+                                              # mid-prefill lanes masked
 """
 from __future__ import annotations
 
@@ -88,6 +90,11 @@ class DenseKVCache:
     def ensure_capacity(self, lane: int, pos: int) -> bool:
         return pos < self.max_len
 
+    def ensure_tokens(self, lane: int, n_tokens: int) -> bool:
+        """Capacity for the first ``n_tokens`` positions (no-op when dense:
+        the lane's strip is pre-sized)."""
+        return n_tokens <= self.max_len
+
     def release(self, lane: int) -> None:
         pass
 
@@ -102,7 +109,7 @@ class DenseKVCache:
             self.caches, handle)
         return True
 
-    def decode_extra(self) -> tuple:
+    def decode_extra(self, mask_lanes=()) -> tuple:
         return ()
 
     # -- accounting ---------------------------------------------------------
@@ -216,6 +223,22 @@ class PagedKVCache:
         self.n_blocks[lane] = blk + 1
         return True
 
+    def ensure_tokens(self, lane: int, n_tokens: int) -> bool:
+        """Chunk-granular growth: allocate pages until the lane covers
+        positions ``[0, n_tokens)``.  Pages acquired before a failure stay
+        allocated (they are tracked in ``n_blocks`` and either used by a
+        later retry or freed wholesale on release/swap-out)."""
+        if n_tokens > self.max_len:
+            return False
+        need = math.ceil(n_tokens / self.page_size)
+        while self.n_blocks[lane] < need:
+            page = self._alloc(1)
+            if page is None:
+                return False
+            self.table[lane, self.n_blocks[lane]] = page[0]
+            self.n_blocks[lane] += 1
+        return True
+
     def release(self, lane: int) -> None:
         self._free_lane(lane)
 
@@ -243,8 +266,21 @@ class PagedKVCache:
         self.swap_ins += 1
         return True
 
-    def decode_extra(self) -> tuple:
-        return (jnp.asarray(self.table),)
+    def decode_extra(self, mask_lanes=()) -> tuple:
+        """Page table for the decode step.  ``mask_lanes`` (mid-prefill
+        lanes) get a zeroed row: the batched decode step still runs over
+        every lane slot, and masking routes those lanes' dummy KV writes
+        to the null page instead of their live prefill pages."""
+        tbl = self.table
+        if mask_lanes:
+            tbl = tbl.copy()
+            tbl[list(mask_lanes), :] = NULL_PAGE
+        return (jnp.asarray(tbl),)
+
+    def table_row(self, lane: int) -> jax.Array:
+        """This lane's logical->physical mapping, shaped (1, nblk) for the
+        single-sequence prefill-chunk step."""
+        return jnp.asarray(self.table[lane:lane + 1])
 
     # -- accounting ---------------------------------------------------------
     def cache_tokens(self) -> int:

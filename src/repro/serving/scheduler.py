@@ -17,6 +17,15 @@ order:
 
 Preempted sequences carry a KV swap handle and resume by swap-in — no
 prefill re-run, bit-identical continuation.
+
+With chunked prefill a lane passes through a **prefill phase** first
+(``LaneState.phase``): ``pos`` counts committed prompt tokens until the
+prompt is fully streamed in, then the lane flips to ``decode``.  A lane
+preempted mid-prefill re-queues with its phase and progress in the
+:class:`ResumeEntry`, so it resumes exactly where it stopped.  Time-slice
+victim selection only considers decoding lanes (a prefill chunk is one
+bounded unit of work per tick already); page-pressure eviction of a
+prefill lane is handled by the engine's prefill tick.
 """
 from __future__ import annotations
 
@@ -43,9 +52,11 @@ class Request:
 @dataclass
 class LaneState:
     rid: int | None = None
-    pos: int = 0
-    remaining: int = 0
+    pos: int = 0               # decode: next KV write position;
+    #                            prefill: prompt tokens committed so far
+    remaining: int = 0         # decode-token budget left
     steps_served: int = 0      # decode steps since (re-)admission
+    phase: str = "decode"      # "prefill" while the prompt streams in
 
 
 @dataclass
@@ -56,6 +67,7 @@ class ResumeEntry:
     handle: Any                # kv backend swap handle
     pos: int
     remaining: int
+    phase: str = "decode"      # preempted mid-prefill resumes mid-prefill
 
 
 class Scheduler:
@@ -90,6 +102,14 @@ class Scheduler:
     def active_lanes(self) -> list[int]:
         return [i for i, l in enumerate(self.lanes) if l.rid is not None]
 
+    def prefill_lanes(self) -> list[int]:
+        return [i for i, l in enumerate(self.lanes)
+                if l.rid is not None and l.phase == "prefill"]
+
+    def decode_lanes(self) -> list[int]:
+        return [i for i, l in enumerate(self.lanes)
+                if l.rid is not None and l.phase == "decode"]
+
     # -- admission ----------------------------------------------------------
     def next_admission(self) -> tuple[str, Any] | None:
         """Head of the ready queue as ('resume' | 'new', item)."""
@@ -103,9 +123,10 @@ class Scheduler:
         self.ready.appendleft(item)
 
     def occupy(self, lane_id: int, req: Request, pos: int,
-               remaining: int) -> None:
+               remaining: int, phase: str = "decode") -> None:
         self.lanes[lane_id] = LaneState(rid=req.rid, pos=pos,
-                                        remaining=remaining, steps_served=0)
+                                        remaining=remaining, steps_served=0,
+                                        phase=phase)
 
     def vacate(self, lane_id: int) -> None:
         self.lanes[lane_id] = LaneState()
@@ -117,7 +138,8 @@ class Scheduler:
         if self.timeslice is None or not self.has_queued:
             return None
         served = [(l.steps_served, i) for i, l in enumerate(self.lanes)
-                  if l.rid is not None and l.steps_served >= self.timeslice]
+                  if l.rid is not None and l.phase == "decode"
+                  and l.steps_served >= self.timeslice]
         if not served:
             return None
         return max(served)[1]
@@ -131,7 +153,7 @@ class Scheduler:
         req.preemptions += 1
         self.preemptions += 1
         entry = ResumeEntry(req=req, handle=handle, pos=lane.pos,
-                            remaining=lane.remaining)
+                            remaining=lane.remaining, phase=lane.phase)
         if priority:
             self.ready.appendleft(entry)
         else:

@@ -13,9 +13,16 @@ page_size) product for the paged path (arXiv 2312.05779's bucket-wise
 runtime re-selection, with the page-gather granularity as the second
 axis).
 
-Declared through the ``repro.at`` session: committed winners persist in
-the session's record store, so a restarted server starts every bucket
-already committed (no first-call tuning jitter on the warm path).
+Chunked prefill adds a second tunable region family
+(:meth:`DecodeAutoTuner.add_prefill`): one ``dynamic select`` per
+(prompt-length bucket × chunk size) whose alternatives are
+``flash_paged_prefill`` tile assignments (block_q × block_k) — the
+prefill hot path becomes a tuning region exactly like decode did.
+
+Declared through the ``repro.at`` session: committed winners (decode and
+prefill alike) persist in the session's record store, so a restarted
+server starts every bucket already committed (no first-call tuning
+jitter on the warm path).
 """
 from __future__ import annotations
 
@@ -57,12 +64,52 @@ class DecodeAutoTuner:
                                  for k, v in zip(self.param_names, var))
                 sel.alternative(name=label)(make_decode(*var))
             self.regions[b] = sel.region
+        self.prefill_buckets: tuple = ()
+        self.prefill_variants: list[tuple] = []
+        self.prefill_param_names: tuple = ()
+        self.prefill_regions: dict[tuple[int, int], object] = {}
         self.session.run("dynamic",
                          [f"DecodeBucket_{b}" for b in buckets])
+
+    # -- prefill region (chunked prefill) ------------------------------------
+    def add_prefill(self, make_prefill: Callable[..., Callable],
+                    chunk_sizes=(64,), buckets=(512, 2048, 8192),
+                    block_qs=(64, 128), block_ks=(256, 512)) -> None:
+        """Declare the prefill tuning region family.
+
+        One ``dynamic select`` per (prompt-length bucket × chunk size);
+        alternatives are built by ``make_prefill(block_q, block_k)`` —
+        the (bucket × chunk × block_q × block_k) product space of the
+        ``flash_paged_prefill`` kernel.  Winners commit per region and
+        persist in the session's record store next to the decode winners.
+        """
+        self.prefill_buckets = tuple(buckets)
+        self.prefill_param_names = ("block_q", "block_k")
+        self.prefill_variants = [(bq, bk) for bq in block_qs
+                                 for bk in block_ks]
+        names = []
+        for b in buckets:
+            for cs in chunk_sizes:
+                name = f"PrefillBucket_{b}_c{cs}"
+                sel = self.session.autotune("dynamic", "select", name=name)
+                for var in self.prefill_variants:
+                    label = ",".join(
+                        f"{k}={v}"
+                        for k, v in zip(self.prefill_param_names, var))
+                    sel.alternative(name=label)(make_prefill(*var))
+                self.prefill_regions[(b, cs)] = sel.region
+                names.append(name)
+        self.session.run("dynamic", names)
 
     def decode(self, kv_len: int, *args, **kwargs):
         b = length_bucket(kv_len, self.buckets)
         return self.session.execute(f"DecodeBucket_{b}", *args, **kwargs)
+
+    def prefill(self, prompt_len: int, chunk_size: int, *args, **kwargs):
+        """Route one prefill chunk through its (bucket × chunk) region."""
+        b = length_bucket(prompt_len, self.prefill_buckets)
+        return self.session.execute(f"PrefillBucket_{b}_c{chunk_size}",
+                                    *args, **kwargs)
 
     def committed(self) -> dict[int, int | None]:
         return {b: self.ctx.dynamic_state[f"DecodeBucket_{b}"].committed
@@ -74,4 +121,19 @@ class DecodeAutoTuner:
         for b, idx in self.committed().items():
             out[b] = None if idx is None \
                 else dict(zip(self.param_names, self.variants[idx]))
+        return out
+
+    def committed_prefill(self) -> dict[tuple[int, int], int | None]:
+        return {key: self.ctx.dynamic_state[
+                    f"PrefillBucket_{key[0]}_c{key[1]}"].committed
+                for key in self.prefill_regions}
+
+    def committed_prefill_params(self) -> dict[tuple[int, int], dict | None]:
+        """Committed prefill winners as PP assignments per
+        (prompt bucket, chunk size)."""
+        out: dict[tuple[int, int], dict | None] = {}
+        for key, idx in self.committed_prefill().items():
+            out[key] = None if idx is None \
+                else dict(zip(self.prefill_param_names,
+                              self.prefill_variants[idx]))
         return out

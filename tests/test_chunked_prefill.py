@@ -1,0 +1,321 @@
+"""Chunked prefill: kernel, cache growth, engine bit-identity, scheduling.
+
+Correctness contract: chunked prefill is an *implementation detail* of
+the paged engine — greedy outputs must be bit-identical to the monolithic
+dense engine (which matches a plain prefill+decode loop,
+test_serving_tuning.py), for every chunk size, including ragged last
+chunks (prompt % chunk != 0), chunk > prompt, and swap-out mid-prefill
+followed by resume.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serving import PagedKVCache, Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def paged_model():
+    cfg = ARCHS["yi-6b"].reduced()      # plain GQA: paged-capable
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(n=3, max_new=6, plen=11):
+    return [Request(rid=i, prompt=[1 + i] + [(3 * i + j) % 90 + 2
+                                             for j in range(plen - 1)],
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _dense_want(model, params, reqs_fn, max_len=48, max_steps=200):
+    eng = ServingEngine(model, params, n_lanes=2, max_len=max_len)
+    for r in reqs_fn():
+        eng.submit(r)
+    return {r.rid: r.out_tokens for r in eng.run(max_steps=max_steps)}
+
+
+# --------------------------------------------------------------------------
+# kernel: paged prefill oracle + Pallas kernel
+# --------------------------------------------------------------------------
+
+
+class TestPagedPrefillKernel:
+    def _pools(self, key, p, hkv, psz, d):
+        kp = jax.random.normal(jax.random.PRNGKey(key), (p, hkv, psz, d))
+        vp = jax.random.normal(jax.random.PRNGKey(key + 1),
+                               (p, hkv, psz, d))
+        return kp * 0.3, vp * 0.3
+
+    def test_prefill_ref_matches_dense_causal(self):
+        """Chunk queries at absolute offset over gathered pages == the
+        dense causal oracle with end-aligned queries."""
+        from repro.kernels import ref
+        b, h, hkv, d, psz, nblk = 1, 4, 2, 16, 8, 3
+        c, start = 6, 10
+        kv_len = start + c
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, h, c, d)) * 0.3
+        kp, vp = self._pools(1, 9, hkv, psz, d)
+        table = jnp.asarray([[4, 2, 7]], jnp.int32)
+        kd = kp[table].transpose(0, 2, 1, 3, 4).reshape(
+            b, hkv, nblk * psz, d)
+        vd = vp[table].transpose(0, 2, 1, 3, 4).reshape(
+            b, hkv, nblk * psz, d)
+        want = ref.attention_ref(q, kd[:, :, :kv_len], vd[:, :, :kv_len],
+                                 causal=True)
+        got = ref.paged_prefill_ref(q, kp, vp, table,
+                                    jnp.asarray([start], jnp.int32),
+                                    jnp.asarray([kv_len], jnp.int32))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_flash_paged_prefill_interpret(self):
+        from repro.kernels import ref
+        from repro.kernels.flash_attention import flash_paged_prefill
+        b, h, hkv, d, psz, nblk = 2, 4, 2, 16, 8, 4
+        c = 8
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, h, c, d)) * 0.3
+        kp, vp = self._pools(1, 11, hkv, psz, d)
+        table = jnp.asarray([[3, 7, 1, 9], [5, 2, 6, 0]], jnp.int32)
+        start = jnp.asarray([12, 0], jnp.int32)
+        kv_len = jnp.asarray([20, 5], jnp.int32)   # seq 1: ragged chunk
+        want = ref.paged_prefill_ref(q, kp, vp, table, start, kv_len)
+        # tile space: whole-chunk, sub-chunk block_q, sub-page block_k
+        for bq, bk in [(128, None), (4, 4), (8, 2), (4, 8)]:
+            got = flash_paged_prefill(q, kp, vp, table, start, kv_len,
+                                      block_q=bq, block_k=bk,
+                                      interpret=True)
+            # rows past kv_len are padding (their KV never committed)
+            np.testing.assert_allclose(got[0], want[0], atol=1e-5,
+                                       err_msg=f"bq={bq} bk={bk}")
+            np.testing.assert_allclose(got[1, :, :5], want[1, :, :5],
+                                       atol=1e-5, err_msg=f"bq={bq} bk={bk}")
+        # a block_k that does not divide the page falls back to whole-page
+        got_bad = flash_paged_prefill(q, kp, vp, table, start, kv_len,
+                                      block_k=3, interpret=True)
+        np.testing.assert_allclose(got_bad[0], want[0], atol=1e-5)
+
+    def test_ops_dispatch_cpu(self):
+        from repro.kernels import ops, ref
+        b, h, hkv, d, psz, p = 1, 2, 1, 8, 4, 5
+        q = jnp.ones((b, h, 3, d)) * 0.1
+        kp = jnp.ones((p, hkv, psz, d)) * 0.2
+        vp = jnp.ones((p, hkv, psz, d)) * 0.3
+        table = jnp.asarray([[1, 2]], jnp.int32)
+        start = jnp.asarray([4], jnp.int32)
+        kv_len = jnp.asarray([7], jnp.int32)
+        got = ops.paged_prefill_attention(q, kp, vp, table, start, kv_len)
+        want = ref.paged_prefill_ref(q, kp, vp, table, start, kv_len)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# PagedKVCache: chunk-granular page growth
+# --------------------------------------------------------------------------
+
+
+class TestEnsureTokens:
+    def test_chunk_granular_growth(self, paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=2, max_len=64, n_pages=9,
+                          page_size=8)
+        assert kv.ensure_tokens(0, 6)       # one page covers [0, 6)
+        assert kv.used_pages == 1
+        assert kv.ensure_tokens(0, 8)       # still within page 0
+        assert kv.used_pages == 1
+        assert kv.ensure_tokens(0, 20)      # grows to 3 pages
+        assert kv.used_pages == 3
+        assert not kv.ensure_tokens(0, 65)  # beyond max_len
+        kv.release(0)
+        assert kv.used_pages == 0
+
+    def test_partial_alloc_survives_failure(self, paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=1, max_len=64, n_pages=3,
+                          page_size=8)       # 2 usable pages
+        assert not kv.ensure_tokens(0, 24)   # needs 3, pool has 2
+        assert kv.n_blocks[0] == 2           # acquired pages kept
+        assert kv.ensure_tokens(0, 16)       # retry within holdings: ok
+
+    def test_decode_extra_masks_prefill_lanes(self, paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=2, max_len=32, n_pages=9,
+                          page_size=8)
+        kv.ensure_tokens(0, 8)
+        kv.ensure_tokens(1, 8)
+        (tbl,) = kv.decode_extra(mask_lanes=[0])
+        assert int(tbl[0, 0]) == 0           # masked to the null page
+        assert int(tbl[1, 0]) != 0
+        assert kv.table[0, 0] != 0           # backing table untouched
+
+
+# --------------------------------------------------------------------------
+# engine: bit-identity across chunk sizes
+# --------------------------------------------------------------------------
+
+
+class TestChunkedEngine:
+    def test_dense_rejects_chunked(self, paged_model):
+        cfg, model, params = paged_model
+        with pytest.raises(ValueError, match="paged"):
+            ServingEngine(model, params, n_lanes=1, max_len=32,
+                          prefill_chunk=8)
+
+    @pytest.mark.parametrize("chunk", [4, 8, 64])
+    def test_chunked_matches_dense(self, paged_model, chunk):
+        """Chunk sizes cover prompt % chunk != 0 (11-token prompts,
+        chunk=4) and chunk > prompt (chunk=64)."""
+        cfg, model, params = paged_model
+        want = _dense_want(model, params, _requests)
+        eng = ServingEngine(model, params, n_lanes=2, max_len=48,
+                            cache="paged", page_size=8,
+                            prefill_chunk=chunk)
+        for r in _requests():
+            eng.submit(r)
+        got = {r.rid: r.out_tokens for r in eng.run(max_steps=300)}
+        assert got == want
+        assert eng.prefill_chunks >= 3      # every prompt streamed in
+
+    def test_swap_out_mid_prefill_then_resume(self, paged_model):
+        """Tiny pool + two long prompts: one lane is evicted *during*
+        prefill (partial pages swap to host), resumes, and still produces
+        the exact dense-engine output."""
+        cfg, model, params = paged_model
+
+        def reqs():
+            return [Request(rid=i,
+                            prompt=[(7 * i + j) % 100 + 1
+                                    for j in range(24)],
+                            max_new_tokens=4) for i in range(2)]
+
+        want = _dense_want(model, params, reqs, max_len=64)
+        eng = ServingEngine(model, params, n_lanes=2, max_len=64,
+                            cache="paged", page_size=8, n_pages=6,
+                            prefill_chunk=8)
+        for r in reqs():
+            eng.submit(r)
+        done = eng.run(max_steps=400)
+        assert {r.rid: r.out_tokens for r in done} == want
+        assert eng.scheduler.preemptions > 0        # evicted mid-prefill
+        assert eng.kv.swap_outs > 0 and eng.kv.swap_ins > 0
+
+    def test_short_request_decodes_before_long_prefill_finishes(
+            self, paged_model):
+        """The continuous-batching point: a short prompt behind a long one
+        gets its first token while the long prompt is still streaming in
+        (with monolithic prefill it would head-of-line-block)."""
+        cfg, model, params = paged_model
+        long_req = Request(rid=0, prompt=list(range(1, 41)),
+                           max_new_tokens=6)
+        short_req = Request(rid=1, prompt=[5, 6, 7], max_new_tokens=6)
+        eng = ServingEngine(model, params, n_lanes=2, max_len=64,
+                            cache="paged", page_size=8, prefill_chunk=4)
+        eng.submit(long_req)
+        eng.submit(short_req)
+        done = {r.rid: r for r in eng.run(max_steps=300)}
+        assert len(done) == 2
+        # long prompt: 40 tokens / chunk 4 = 10 ticks of prefill; the
+        # short request's first token must land before the long one's
+        assert done[1].first_token_t < done[0].first_token_t
+        # and the outputs still match solo (uninterleaved) runs
+        for rid, prompt in ((0, list(range(1, 41))), (1, [5, 6, 7])):
+            solo = ServingEngine(model, params, n_lanes=2, max_len=64)
+            solo.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+            assert done[rid].out_tokens == \
+                solo.run(max_steps=100)[0].out_tokens
+
+    def test_single_token_prompt_and_eos(self, paged_model):
+        """max_new_tokens=1 finishes at the end of prefill (no decode)."""
+        cfg, model, params = paged_model
+        eng = ServingEngine(model, params, n_lanes=1, max_len=32,
+                            cache="paged", page_size=8, prefill_chunk=8)
+        eng.submit(Request(rid=0, prompt=[3, 1, 4], max_new_tokens=1))
+        done = eng.run(max_steps=20)
+        assert len(done) == 1 and len(done[0].out_tokens) == 1
+
+
+# --------------------------------------------------------------------------
+# prefill tuning region (repro.at dynamic select)
+# --------------------------------------------------------------------------
+
+
+class TestPrefillTuningRegion:
+    def _mk(self, calls):
+        def make_prefill(bq, bk):
+            def fn():
+                calls.append((bq, bk))
+                return {"bq": bq, "bk": bk}
+            return fn
+        return make_prefill
+
+    def test_bucket_chunk_product_space_commits(self, tmp_path):
+        from repro import at
+        from repro.tuning import DecodeAutoTuner
+        session = at.AutoTuner(str(tmp_path))
+        tuner = DecodeAutoTuner(session, lambda bk: (lambda: bk),
+                                buckets=(512,), block_ks=(256,))
+        calls: list = []
+        tuner.add_prefill(self._mk(calls), chunk_sizes=(8, 16),
+                          buckets=(512, 2048), block_qs=(4, 8),
+                          block_ks=(4, 8))
+        assert len(tuner.prefill_regions) == 4      # bucket x chunk
+        assert all(len(r.subregions) == 4           # block_q x block_k
+                   for r in tuner.prefill_regions.values())
+        for _ in range(4):                          # one call per candidate
+            tuner.prefill(300, 8)
+        pp = tuner.committed_prefill_params()[(512, 8)]
+        assert pp["block_q"] in (4, 8) and pp["block_k"] in (4, 8)
+        assert tuner.committed_prefill_params()[(2048, 8)] is None
+
+    def test_warm_restart_zero_tuning(self, tmp_path):
+        """A second session on the same workdir starts with the prefill
+        bucket committed — zero tuning-executor invocations, alongside
+        the decode winners."""
+        from repro import at
+        from repro.tuning import DecodeAutoTuner
+
+        calls1: list = []
+        s1 = at.AutoTuner(str(tmp_path))
+        t1 = DecodeAutoTuner(s1, lambda bk: (lambda: bk),
+                             buckets=(512,), block_ks=(256,))
+        t1.add_prefill(self._mk(calls1), chunk_sizes=(8,), buckets=(512,),
+                       block_qs=(4, 8), block_ks=(8,))
+        for _ in range(2):
+            t1.prefill(100, 8)
+        winner = t1.committed_prefill()[(512, 8)]
+        assert winner is not None
+
+        calls2: list = []
+        s2 = at.AutoTuner(str(tmp_path))
+        t2 = DecodeAutoTuner(s2, lambda bk: (lambda: bk),
+                             buckets=(512,), block_ks=(256,))
+        t2.add_prefill(self._mk(calls2), chunk_sizes=(8,), buckets=(512,),
+                       block_qs=(4, 8), block_ks=(8,))
+        assert t2.committed_prefill()[(512, 8)] == winner
+        assert s2.executor_calls == 0
+        assert ("dynamic", "PrefillBucket_512_c8") in s2.warm_hits
+        out = t2.prefill(100, 8)
+        assert out["bq"] == (4, 8)[winner]
+        assert calls2 == [((4, 8)[winner], 8)]      # no re-measurement
+
+    def test_engine_routes_through_prefill_region(self, paged_model,
+                                                  tmp_path):
+        """End-to-end: the engine's prefill tick goes through the tuner's
+        prefill region and outputs stay bit-identical."""
+        cfg, model, params = paged_model
+        from repro.launch.serve import _make_autotuner
+        want = _dense_want(model, params, lambda: _requests(2))
+        tuner = _make_autotuner(model, str(tmp_path), "paged", 8,
+                                prefill_chunk=8)
+        eng = ServingEngine(model, params, n_lanes=2, max_len=48,
+                            cache="paged", page_size=8, prefill_chunk=8,
+                            autotuner=tuner)
+        for r in _requests(2):
+            eng.submit(r)
+        got = {r.rid: r.out_tokens for r in eng.run(max_steps=200)}
+        assert got == want
+        assert any(v is not None
+                   for v in tuner.committed_prefill().values()) \
+            or eng.prefill_chunks > 0
