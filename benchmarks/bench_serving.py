@@ -10,6 +10,14 @@ dispatch) and emits ``BENCH_serving.json``:
   number is ``ttft_short_p50_s``: with chunked prefill the short requests
   decode while the long prompt streams in chunk by chunk, so their TTFT
   must drop vs the head-of-line-blocked monolithic run.
+* **spec** cells — greedy speculative decoding on the paged engine, one
+  cell per draft length k: a self-speculative draft (the target's
+  leading layers) proposes k tokens per tick and the target verifies
+  them in one chunked call.  Cells report tokens/s per k plus the
+  measured ``accept_rate``, which ``compare.py`` gates above zero.  Spec
+  cells run a 4-layer variant of the reduced config (draft = 3 layers):
+  acceptance is a draft/target *agreement* property, and at random init
+  a 1-of-2-layer draft almost never agrees while 3-of-4 reliably does.
 
 Numbers are CPU-proxy (interpret-mode kernels on reduced configs) — the
 *trajectory* across PRs is the signal, not the absolute values.
@@ -143,6 +151,66 @@ def bench_mixed(arch: str, prefill_chunk: int | None, n_short: int,
     }
 
 
+def bench_spec(arch: str, spec_k: int, n_requests: int, n_lanes: int,
+               max_len: int, max_new: int, page_size: int,
+               seed: int = 0) -> dict:
+    """Greedy speculative decoding on the paged engine (one cell per k).
+
+    The draft is self-speculative: ``draft_config(depth_frac=0.75)`` of a
+    4-layer variant of the reduced config, parameters sliced from the
+    target's own leading layers with shared embed/head (see module
+    docstring for why the depth is bumped for these cells).
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = dataclasses.replace(get_arch(arch).reduced(), n_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    draft_model = model.draft_model(depth_frac=0.75)
+    draft_params = model.slice_draft_params(params, draft_model)
+    engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
+                           cache="paged", page_size=page_size,
+                           draft_model=draft_model,
+                           draft_params=draft_params, spec_k=spec_k)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for rid in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(4, 12))).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt,
+                              max_new_tokens=max_new))
+    finished = engine.run(max_steps=n_requests * (max_new + 6))
+    wall = time.time() - t0
+    s = engine.metrics.summary()
+    spec = engine.spec_stats()
+    return {
+        "arch": arch, "cache": "paged", "workload": "spec",
+        "spec_k": spec_k, "n_layers": cfg.n_layers,
+        "draft_layers": draft_model.cfg.n_layers, "n_lanes": n_lanes,
+        "requests": n_requests, "finished": len(finished),
+        "decode_steps": engine.steps, "spec_ticks": spec["spec_ticks"],
+        "drafted_tokens": spec["drafted_tokens"],
+        "accepted_tokens": spec["accepted_tokens"],
+        "accept_rate": spec["accept_rate"],
+        "generated_tokens": s["generated_tokens"],
+        "tokens_per_s": s["generated_tokens"] / wall if wall else 0.0,
+        "tokens_per_step": (s["generated_tokens"] / engine.steps
+                            if engine.steps else 0.0),
+        "ttft_p50_s": s["ttft_s"]["p50"], "ttft_p99_s": s["ttft_s"]["p99"],
+        "itl_p50_s": s["itl_s"]["p50"], "itl_p99_s": s["itl_s"]["p99"],
+        "preemptions": s["preemptions"],
+        "cache_stats": engine.kv.stats(),
+        "wall_s": wall,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -157,6 +225,9 @@ def main() -> None:
                     help="chunk size for the mixed-workload chunked cells")
     ap.add_argument("--long-len", type=int, default=48,
                     help="long-prompt length in the mixed workload")
+    ap.add_argument("--spec-ks", type=int, nargs="+", default=[1, 4],
+                    help="draft lengths for the speculative cells "
+                         "(one cell per k)")
     ap.add_argument("--repeats", type=int, default=2,
                     help="run each cell N times, keep the best run: the "
                          "first repeat pays jit compile time, later ones "
@@ -199,6 +270,17 @@ def main() -> None:
                   f"short-ttft p50 {fmt(row['ttft_short_p50_s'], '.3f')}s  "
                   f"long ttft {fmt(row['ttft_long_s'], '.3f')}s  "
                   f"{row['tokens_per_s']:6.1f} tok/s")
+        # speculative decode: tokens/s + accept rate per draft length k
+        for k in args.spec_ks:
+            row = best_of(lambda: bench_spec(
+                arch, k, args.requests, args.lanes, args.max_len,
+                args.max_new, args.page_size))
+            results.append(row)
+            print(f"[bench_serving] {arch:14s} paged  spec/k={k:<2d}     "
+                  f"{row['tokens_per_s']:8.1f} tok/s  "
+                  f"accept {row['accepted_tokens']}/{row['drafted_tokens']} "
+                  f"({row['accept_rate']:.0%})  "
+                  f"{row['tokens_per_step']:.2f} tok/step")
 
     # the run shape is stamped into the payload so compare.py can refuse
     # to diff two benchmarks that measured different workloads
@@ -207,7 +289,8 @@ def main() -> None:
               "max_new": args.max_new, "page_size": args.page_size,
               "timeslice": args.timeslice,
               "prefill_chunk": args.prefill_chunk,
-              "long_len": args.long_len, "repeats": args.repeats}
+              "long_len": args.long_len, "spec_ks": list(args.spec_ks),
+              "repeats": args.repeats}
     payload = {"benchmark": "serving", "config": config, "results": results}
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

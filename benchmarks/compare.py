@@ -7,7 +7,10 @@ current run regresses past the thresholds:
 * throughput (``tokens_per_s``) drops by more than ``--max-tps-drop``
   (default 20%);
 * p99 TTFT (``ttft_p99_s``) rises by more than ``--max-ttft-rise``
-  (default 25%).
+  (default 25%);
+* a speculative cell's measured ``accept_rate`` falls to zero while the
+  baseline's is positive (the draft/verify path stopped accepting —
+  speculation degenerated into pure overhead).
 
 An absolute TTFT slack (``--ttft-floor``, default 50 ms) absorbs
 scheduler jitter on cells whose TTFT is tiny: a rise only fails the gate
@@ -47,12 +50,15 @@ def cell_key(row: dict) -> tuple:
         row.get("cache"),
         row.get("workload", "uniform"),
         row.get("prefill_chunk"),
+        row.get("spec_k"),
     )
 
 
 def _fmt_key(key: tuple) -> str:
-    arch, cache, workload, chunk = key
+    arch, cache, workload, chunk, spec_k = key
     mode = f"/chunk={chunk}" if chunk else ""
+    if spec_k is not None:
+        mode += f"/k={spec_k}"
     return f"{arch}:{cache}:{workload}{mode}"
 
 
@@ -101,6 +107,12 @@ def compare(
                     f"{name}: p99 TTFT rose {rise:.0%} "
                     f"({b_ttft:.3f}s -> {c_ttft:.3f}s; limit {max_ttft_rise:.0%})"
                 )
+        b_ar, c_ar = base.get("accept_rate"), cur.get("accept_rate")
+        if b_ar and not c_ar:
+            failures.append(
+                f"{name}: speculative accept rate fell to zero "
+                f"(baseline {b_ar:.1%}) — drafts are pure overhead"
+            )
     return failures
 
 

@@ -7,7 +7,7 @@ One :class:`ArchConfig` per assigned architecture lives in
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 def pad_to(x: int, mult: int) -> int:
@@ -149,6 +149,36 @@ class ArchConfig:
         n += self.n_layers * (attn + active_experts + router)
         return n
 
+    def draft_config(self, depth_frac: float = 0.5,
+                     width_frac: float = 1.0) -> "ArchConfig":
+        """Speculative-decoding draft: the same family at reduced depth
+        (and optionally width), sharing the target's vocabulary.
+
+        The default keeps the width so the draft can be *self-speculative*:
+        its parameters are sliced straight out of the target's layer stack
+        (:func:`repro.models.transformer.slice_draft_params`) and the
+        embedding / head are shared, which is what makes the draft's
+        argmax actually agree with the target's often enough to pay off.
+        ``width_frac < 1`` instead describes an independently-trained
+        draft (own embedding geometry — no parameter sharing possible).
+        """
+        def scale(n: int, frac: float, floor: int = 1) -> int:
+            return max(floor, int(n * frac))
+
+        kw: dict = {
+            "name": f"{self.name}-draft",
+            "n_layers": scale(self.n_layers, depth_frac),
+        }
+        if width_frac < 1.0:
+            kw.update(
+                d_model=scale(self.d_model, width_frac, 32),
+                n_heads=scale(self.n_heads, width_frac),
+                d_ff=scale(self.d_ff, width_frac, 32),
+                d_head=self.head_dim,       # keep head geometry
+            )
+            kw["n_kv_heads"] = max(1, min(self.n_kv_heads, kw["n_heads"]))
+        return dataclasses.replace(self, **kw)
+
     def reduced(self) -> "ArchConfig":
         """CPU smoke-test config of the same family."""
         return dataclasses.replace(
@@ -175,7 +205,15 @@ class ArchConfig:
             n_encoder_layers=2 if self.n_encoder_layers else 0,
             window=min(self.window, 32) if self.window else None,
             frontend_seq=8 if self.frontend != "none" else 0,
-            cache_dtype="float32",   # exact prefill->decode smoke checks
+            # exact prefill->decode smoke checks; float32 compute keeps
+            # mathematically-equivalent dispatch shapes (decode step vs
+            # k+1-wide speculative verify of the same position) from
+            # flipping argmax on bf16-rounding near-ties, which is what
+            # the engine bit-identity suites compare.  bf16 numerics stay
+            # covered by the explicit-dtype kernel sweeps (test_kernels)
+            # and by the full-size configs, which keep the bf16 default.
+            compute_dtype="float32",
+            cache_dtype="float32",
         )
 
 

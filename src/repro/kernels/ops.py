@@ -127,6 +127,32 @@ def paged_prefill_attention(q, k_pool, v_pool, page_table, start, kv_len, *,
                                interpret=on_cpu(), **kw)
 
 
+def paged_verify_attention(q, k_pool, v_pool, page_table, start, kv_len, *,
+                           use_kernel: bool | None = None, **pps):
+    """Speculative-decode verify attention over a paged KV cache.
+
+    The chunk is ``[last committed token, draft_1 .. draft_k]`` (q:
+    (B, H, k+1, D), first token at absolute position ``start``): no new
+    kernel math — it is exactly the chunked-prefill computation (causal
+    over the committed prefix plus the chunk's own triangle), reusing the
+    Pallas ``flash_paged_prefill`` kernel on TPU and the gather oracle on
+    CPU.  What differs is the tuning surface: verify chunks are k+1
+    tokens wide, so tuned PPs are read from ``flash_paged_verify`` (the
+    serving ``SpecBucket`` regions tune k and the (block_q x block_k)
+    tile per length bucket) instead of the prefill entry.
+    """
+    if use_kernel is None:
+        use_kernel = not on_cpu()
+    if not use_kernel:
+        return ref.paged_prefill_ref(q, k_pool, v_pool, page_table,
+                                     start, kv_len)
+    kw = tuned("flash_paged_verify")
+    kw.update(pps)
+    kw = {k: v for k, v in kw.items() if k in ("block_q", "block_k", "scale")}
+    return flash_paged_prefill(q, k_pool, v_pool, page_table, start, kv_len,
+                               interpret=on_cpu(), **kw)
+
+
 def ssm_scan(x, dt, a, b, c, d, *, use_kernel: bool | None = None,
              return_final_state: bool = False, **pps):
     if use_kernel is None:

@@ -15,15 +15,24 @@ stream into the paged cache N tokens per tick interleaved with decode,
 and the prefill tile space (block_q x block_k per prompt bucket) becomes
 a second run-time tuning region next to the decode buckets.
 
+``--draft`` turns on speculative decoding (paged only): a reduced-depth
+draft sliced from the target's own layers proposes ``--spec-k`` tokens
+per tick and the target verifies them in one chunked call; with
+``--autotune`` the (k x verify tile) space becomes a third tuning region
+family (``SpecBucket_{b}``).  ``--temperature/--top-k/--top-p`` switch
+the synthetic requests from greedy to sampled decoding (per-request
+seeds, reproducible).
+
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8 \
         --cache paged --pages 64 --page-size 16 --prefill-chunk 8 \
-        --autotune --workdir /tmp/at
+        --draft --spec-k 4 --autotune --workdir /tmp/at
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -31,11 +40,12 @@ import numpy as np
 from .. import at
 from ..configs import get_arch
 from ..models import build_model
-from ..serving import Request, ServingEngine
+from ..serving import Request, SamplingParams, ServingEngine
 
 
 def _make_autotuner(model, workdir: str, cache: str, page_size: int,
-                    prefill_chunk: int | None = None):
+                    prefill_chunk: int | None = None,
+                    spec_k: int | None = None):
     """Per-bucket dynamic select over decode variants (repro.at session).
 
     Each candidate gets its own jit cache and publishes its block PPs
@@ -83,6 +93,60 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                 buckets=(128, 512, 2048),
                 block_qs=(max(1, prefill_chunk // 2), prefill_chunk),
                 block_ks=(max(1, page_size // 2), page_size))
+        if spec_k is not None:
+            # the accept-window k is itself tuned: a variant verifies only
+            # its first k drafts (narrower chunk, fewer acceptable tokens)
+            # — greedy output is bit-identical for every k, so the region
+            # measures the acceptance-vs-verify-cost trade-off freely.
+            # Each variant reports time_per_token (its call time over the
+            # tokens its window would emit under the greedy accept rule):
+            # raw per-call latency would always elect the narrowest k, so
+            # the region commits on throughput, not verify cost alone.
+            def make_verify(k, block_q, block_k):
+                verify_jit = jax.jit(model.speculative_step)
+
+                def variant(p, caches, table, tokens, start, kv_len,
+                            k=k, block_q=block_q, block_k=block_k,
+                            measure=True):
+                    at.publish("flash_paged_verify", block_q=block_q,
+                               block_k=block_k)
+                    args = (p, caches, table, tokens[:, :k + 1], start,
+                            jax.numpy.minimum(kv_len, start + k + 1))
+                    if not measure:
+                        # committed steady state: no sync, no host-side
+                        # acceptance proxy — just the verify itself
+                        return verify_jit(*args)
+                    t0 = time.perf_counter()
+                    logits, caches_out = verify_jit(*args)
+                    logits.block_until_ready()
+                    dt = time.perf_counter() - t0
+                    # greedy-acceptance proxy over the live lanes (kv_len
+                    # > start; masked/idle rows are excluded): leading
+                    # draft/argmax matches + 1 bonus each = tokens this
+                    # window emits per call
+                    am = np.asarray(jax.numpy.argmax(logits[:, :-1], -1))
+                    dr = np.asarray(tokens[:, 1:k + 1])
+                    st_np = np.asarray(start)
+                    kl = np.asarray(kv_len)
+                    emitted = 0
+                    for b in range(dr.shape[0]):
+                        if kl[b] <= st_np[b]:
+                            continue
+                        w = min(k, int(kl[b] - st_np[b]) - 1)
+                        a = 0
+                        while a < w and dr[b, a] == am[b, a]:
+                            a += 1
+                        emitted += a + 1
+                    return {"logits": logits, "caches": caches_out,
+                            "time_per_token": dt / max(emitted, 1)}
+                return variant
+
+            tuner.add_spec(
+                make_verify,
+                ks=tuple(sorted({1, max(1, spec_k // 2), spec_k})),
+                buckets=(128, 512, 2048),
+                block_qs=(spec_k + 1,),
+                block_ks=(max(1, page_size // 2), page_size))
         return tuner
 
     def make_decode(block_k):
@@ -103,23 +167,39 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
           seed: int = 0, autotune: bool = False, workdir: str = ".",
           cache: str = "dense", n_pages: int | None = None,
           page_size: int = 16, timeslice: int | None = None,
-          prefill_chunk: int | None = None) -> dict:
+          prefill_chunk: int | None = None, draft: bool = False,
+          spec_k: int = 4, temperature: float = 0.0, top_k: int = 0,
+          top_p: float = 1.0) -> dict:
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
+    draft_model = draft_params = None
+    if draft:
+        # self-speculative draft: the target's own leading layers (shared
+        # embed/head), so the draft's argmax actually agrees with the
+        # target often enough for acceptances to happen at random init
+        draft_model = model.draft_model()
+        draft_params = model.slice_draft_params(params, draft_model)
     tuner = _make_autotuner(model, workdir, cache, page_size,
-                            prefill_chunk=prefill_chunk) \
+                            prefill_chunk=prefill_chunk,
+                            spec_k=spec_k if draft else None) \
         if autotune else None
     engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
                            autotuner=tuner, cache=cache, n_pages=n_pages,
                            page_size=page_size, timeslice=timeslice,
-                           prefill_chunk=prefill_chunk)
+                           prefill_chunk=prefill_chunk,
+                           draft_model=draft_model,
+                           draft_params=draft_params,
+                           spec_k=spec_k if draft else None)
     rng = np.random.default_rng(seed)
     for rid in range(n_requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=rng.integers(4, prompt_len)).tolist()
         engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=max_new))
+                              max_new_tokens=max_new,
+                              sampling=SamplingParams(
+                                  temperature=temperature, top_k=top_k,
+                                  top_p=top_p, seed=seed + rid)))
     finished = engine.run(max_steps=n_requests * (max_new + 4))
     summary = engine.metrics.summary()
     return {
@@ -135,12 +215,15 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         "wall_s": summary["wall_s"],
         "preemptions": summary["preemptions"],
         "prefill_chunks": engine.prefill_chunks,
+        "spec": engine.spec_stats() if draft else None,
         "cache": engine.kv.stats(),
         "committed_buckets": tuner.committed_params() if tuner else None,
         "committed_prefill": (
             {f"{b}_c{cs}": pp for (b, cs), pp
              in tuner.committed_prefill_params().items()}
             if tuner and tuner.prefill_regions else None),
+        "committed_spec": (tuner.committed_spec_params()
+                           if tuner and tuner.spec_regions else None),
     }
 
 
@@ -164,6 +247,17 @@ def main() -> None:
                     help="paged: stream prompts in N-token chunks "
                          "interleaved with decode (chunked prefill / "
                          "continuous batching); default: monolithic")
+    ap.add_argument("--draft", action="store_true",
+                    help="paged: speculative decoding with a reduced-depth "
+                         "self-speculative draft (target's leading layers)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative tick")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling filter (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 disables)")
     ap.add_argument("--autotune", action="store_true",
                     help="run-time AT over decode buckets (repro.at)")
     ap.add_argument("--workdir", default=".",
@@ -174,17 +268,26 @@ def main() -> None:
                 max_new=args.max_new, autotune=args.autotune,
                 workdir=args.workdir, cache=args.cache,
                 n_pages=args.pages, page_size=args.page_size,
-                timeslice=args.timeslice, prefill_chunk=args.prefill_chunk)
+                timeslice=args.timeslice, prefill_chunk=args.prefill_chunk,
+                draft=args.draft, spec_k=args.spec_k,
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p)
     def fmt(x, spec):
         return format(x, spec) if x is not None else "n/a"
 
+    spec_note = ""
+    if out["spec"] is not None:
+        s = out["spec"]
+        spec_note = (f", spec k={s['spec_k']} accept "
+                     f"{s['accepted_tokens']}/{s['drafted_tokens']} "
+                     f"({s['accept_rate']:.0%})")
     print(f"[serve] {out['finished']}/{out['requests']} requests, "
           f"{out['generated_tokens']} tokens in {out['wall_s']:.1f}s "
           f"({out['tokens_per_s']:.1f} tok/s, "
           f"ttft p50 {fmt(out['p50_ttft_s'], '.3f')}s "
           f"p99 {fmt(out['p99_ttft_s'], '.3f')}s, "
           f"itl p50 {fmt(out['p50_itl_s'], '.4f')}s, "
-          f"preemptions {out['preemptions']})")
+          f"preemptions {out['preemptions']}{spec_note})")
 
 
 if __name__ == "__main__":

@@ -160,7 +160,49 @@ def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
     attention runs over the committed prefix plus the chunk's causal
     triangle.  Returns (out, k_pool, v_pool).
     """
-    assert cfg.window is None, "paged prefill does not support SWA archs"
+    q, k_pool, v_pool = _paged_chunk_scatter(p, x, k_pool, v_pool,
+                                             page_table, start, kv_len, cfg)
+    out = ops.paged_prefill_attention(q, k_pool, v_pool, page_table,
+                                      start, kv_len)
+    b, c, _ = x.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], k_pool, v_pool
+
+
+def paged_verify(p: dict, x: jax.Array, k_pool: jax.Array,
+                 v_pool: jax.Array, page_table: jax.Array,
+                 start: jax.Array, kv_len: jax.Array, cfg: AttnConfig):
+    """Speculative-verify attention: one *candidate* chunk against a paged
+    KV cache.
+
+    Identical math to :func:`paged_prefill` — the chunk here is
+    ``[last committed token, draft_1 .. draft_k]`` rather than prompt
+    tokens, causal at absolute positions over the committed prefix plus
+    the chunk's own triangle — but dispatched through
+    :func:`~repro.kernels.ops.paged_verify_attention`, whose tile space is
+    tuned separately (verify chunks are k+1 tokens wide, not a prefill
+    chunk).  Rejected drafts' KV lands in the pages and is rolled back by
+    the cache layer (``truncate_to``); padded rows (``pos >= kv_len``)
+    route to the null page as in prefill.  Returns (out, k_pool, v_pool).
+    """
+    q, k_pool, v_pool = _paged_chunk_scatter(p, x, k_pool, v_pool,
+                                             page_table, start, kv_len, cfg)
+    out = ops.paged_verify_attention(q, k_pool, v_pool, page_table,
+                                     start, kv_len)
+    b, c, _ = x.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], k_pool, v_pool
+
+
+def _paged_chunk_scatter(p: dict, x: jax.Array, k_pool: jax.Array,
+                         v_pool: jax.Array, page_table: jax.Array,
+                         start: jax.Array, kv_len: jax.Array,
+                         cfg: AttnConfig):
+    """Project a chunk's QKV at absolute positions and scatter its KV into
+    the pages (write-before-read contract shared by prefill and verify).
+    Padded tail positions — ``pos >= kv_len`` — are redirected to the
+    null page 0 so ragged chunks can never corrupt live pages."""
+    assert cfg.window is None, "paged chunk attention does not support SWA"
     b, c, _ = x.shape
     psz = k_pool.shape[2]
     positions = start[:, None] + jnp.arange(c)[None, :]       # (B, C)
@@ -174,10 +216,7 @@ def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
     didx = jnp.arange(cfg.d_head)[None, None, None, :]
     k_pool = k_pool.at[pidx, hidx, sidx, didx].set(k.astype(k_pool.dtype))
     v_pool = v_pool.at[pidx, hidx, sidx, didx].set(v.astype(v_pool.dtype))
-    out = ops.paged_prefill_attention(q, k_pool, v_pool, page_table,
-                                      start, kv_len)
-    out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
-    return out @ p["wo"], k_pool, v_pool
+    return q, k_pool, v_pool
 
 
 def init_paged_pool(n_pages: int, cfg: AttnConfig, page_size: int,

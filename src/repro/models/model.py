@@ -86,6 +86,23 @@ class Model:
                                               tokens, start, kv_len,
                                               logit_idx, self.cfg)
 
+    # -- speculative decoding (serving) ------------------------------------
+    def speculative_step(self, params, caches, page_table, tokens,
+                         start, kv_len):
+        """Verify one candidate chunk per lane; full (B, C, V) logits."""
+        return transformer.speculative_step(params, caches, page_table,
+                                            tokens, start, kv_len, self.cfg)
+
+    def draft_model(self, depth_frac: float = 0.5,
+                    width_frac: float = 1.0) -> "Model":
+        """The reduced-depth/width draft of this architecture."""
+        return Model(self.cfg.draft_config(depth_frac, width_frac))
+
+    def slice_draft_params(self, params, draft_model: "Model") -> dict:
+        """Self-speculative draft params (target's leading layers)."""
+        return transformer.slice_draft_params(params, self.cfg,
+                                              draft_model.cfg)
+
     # -- dry-run input stand-ins ------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> dict:
         """ShapeDtypeStruct inputs for the given shape's step function."""

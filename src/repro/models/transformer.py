@@ -11,7 +11,6 @@ collection), ``decode_step`` (one token, scanned over per-layer caches).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -417,6 +416,79 @@ def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
     w = _compute(lm_head_weight(params, cfg), cfg)
     logits = (x_last @ w).astype(jnp.float32)
     return logits, {"kv": new_states["kv"]}
+
+
+def speculative_step(params: dict, caches: Any, page_table: jax.Array,
+                     tokens: jax.Array, start: jax.Array,
+                     kv_len: jax.Array, cfg: ArchConfig):
+    """Speculative *verify* step: score every chunk position in one call.
+
+    tokens (B, C) int32 — ``[last committed token, draft_1 .. draft_k]``
+    at absolute positions ``start .. start + C - 1`` (rows at positions
+    ``>= kv_len`` are padding; their KV routes to the null page), start /
+    kv_len (B,) int32, page_table (B, nblk) shared by every layer.  The
+    attention math is exactly chunked prefill (committed prefix + the
+    chunk's causal triangle at absolute positions) dispatched through the
+    ``verify``-tuned kernel entry; unlike :func:`paged_prefill_step` the
+    *full* (B, C, V) logits come back — the accept/reject rule needs the
+    target distribution at every drafted position, not just the last one.
+    Returns (logits (B, C, V) float32, caches).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _compute(x, cfg)
+    kind = cfg.layer_kinds()[0]
+    acfg = attn_config(cfg)
+
+    def body(carry, scanned):
+        x, = carry
+        lp = scanned["params"]
+        kp, vp = scanned["kv"]
+        h, kp, vp = attn.paged_verify(lp["attn"],
+                                      _norm(cfg, lp, x, "norm1"),
+                                      kp, vp, page_table, start, kv_len,
+                                      acfg)
+        x = x + h
+        h2 = _norm(cfg, lp, x, "norm2")
+        if kind == "attn_mlp":
+            x = x + _mlp_apply(lp["mlp"], h2, cfg)
+        else:
+            out, _ = moe_mod.apply_moe(lp["moe"], h2, moe_config(cfg))
+            x = x + out
+        return (x,), {"kv": (kp, vp)}
+
+    scanned_in = {"params": _cast_tree(params["layers"], cfg),
+                  "kv": caches["kv"]}
+    (x,), new_states = jax.lax.scan(body, (x,), scanned_in)
+    x = _norm(cfg, _cast_tree(
+        {k: params[k] for k in params if k.startswith("final_norm")}, cfg),
+        x, "final_norm")
+    w = _compute(lm_head_weight(params, cfg), cfg)
+    logits = (x @ w).astype(jnp.float32)
+    return logits, {"kv": new_states["kv"]}
+
+
+def slice_draft_params(params: dict, cfg: ArchConfig,
+                       draft_cfg: ArchConfig) -> dict:
+    """Self-speculative draft parameters: the target's leading layers.
+
+    Slices the layer-stacked leaves down to ``draft_cfg.n_layers`` and
+    shares the embedding / final norm / head, so the draft is the target
+    with its tail layers skipped (Draft&Verify-style self-speculation).
+    Requires an identical width (``draft_config(width_frac=1.0)``) —
+    a narrower draft has its own embedding geometry and must be trained
+    (initialised) independently instead.
+    """
+    if (draft_cfg.d_model, draft_cfg.n_heads, draft_cfg.head_dim) != \
+            (cfg.d_model, cfg.n_heads, cfg.head_dim):
+        raise ValueError(
+            "slice_draft_params needs a same-width draft config; "
+            "width-reduced drafts take independently initialised params")
+    if draft_cfg.n_layers > cfg.n_layers:
+        raise ValueError("draft is deeper than the target")
+    out = dict(params)
+    out["layers"] = jax.tree.map(lambda a: a[:draft_cfg.n_layers],
+                                 params["layers"])
+    return out
 
 
 def decode_step(params: dict, caches: Any, token: jax.Array,

@@ -5,14 +5,18 @@ Layers (see ``docs/SERVING.md``):
 
 * :mod:`.scheduler` — FIFO admission + preemptive continuous batching;
 * :mod:`.kvcache` — ``DenseKVCache`` / ``PagedKVCache`` backends;
+* :mod:`.sampling` — per-request temperature/top-k/top-p + the
+  speculative accept/reject rule;
 * :mod:`.metrics` — TTFT / inter-token latency / throughput aggregation;
-* :mod:`.engine` — the orchestrator tying them to the model's decode step.
+* :mod:`.engine` — the orchestrator tying them to the model's decode
+  step (plain, chunked-prefill, and speculative).
 """
 from .engine import LaneState, Request, ServingEngine, length_bucket
 from .kvcache import DenseKVCache, PagedKVCache, make_kv_cache
 from .metrics import ServingMetrics
+from .sampling import SamplingParams
 from .scheduler import Scheduler
 
 __all__ = ["ServingEngine", "Request", "LaneState", "length_bucket",
            "DenseKVCache", "PagedKVCache", "make_kv_cache", "Scheduler",
-           "ServingMetrics"]
+           "ServingMetrics", "SamplingParams"]

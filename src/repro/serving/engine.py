@@ -24,6 +24,17 @@ admission: each tick runs one prefill chunk per mid-prefill lane, then
 one batched decode step over the decoding lanes — long prompts stop
 head-of-line-blocking short requests (chunked prefill / continuous
 batching; see docs/SERVING.md for the tick anatomy).
+
+With ``spec_k=k`` plus a draft model (paged only) the decode step is
+*speculative*: a small draft proposes up to k tokens per tick, the
+target scores all k+1 positions in ONE verify call (the chunked-prefill
+kernel over ``[last token, draft_1..draft_k]``), and the accept/reject
+rule emits 1..k+1 tokens per tick — decode throughput stops being
+bounded by one paged-attention dispatch per emitted token.  Rejected
+drafts' KV rolls back via ``PagedKVCache.truncate_to``.  Token choice
+everywhere (greedy or sampled) routes through per-request
+:class:`~repro.serving.sampling.SamplingParams`; greedy speculative
+output is bit-identical to plain greedy decode.
 """
 from __future__ import annotations
 
@@ -34,7 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kvcache import PagedKVCache, make_kv_cache
+from . import sampling
+from .kvcache import DenseKVCache, PagedKVCache, make_kv_cache
 from .metrics import ServingMetrics
 from .scheduler import LaneState, Request, Scheduler
 
@@ -56,7 +68,9 @@ class ServingEngine:
                  greedy: bool = True, autotuner=None,
                  cache: str = "dense", n_pages: int | None = None,
                  page_size: int = 16, timeslice: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 draft_model=None, draft_params=None,
+                 spec_k: int | None = None):
         self.model = model
         self.params = params
         self.n_lanes = n_lanes
@@ -78,16 +92,47 @@ class ServingEngine:
             model.prefill, static_argnums=(3,))
         if prefill_chunk is not None:
             self._prefill_step = jax.jit(model.paged_prefill_step)
+        # -- speculative decoding ------------------------------------------
+        self.spec_k = spec_k
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        if spec_k is not None:
+            if spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            if draft_model is None or draft_params is None:
+                raise ValueError(
+                    "speculative decoding needs a draft model: pass "
+                    "draft_model + draft_params (see ArchConfig."
+                    "draft_config / Model.slice_draft_params)")
+            if self.kv.kind != "paged":
+                raise ValueError(
+                    "speculative decoding verifies drafts through the "
+                    "paged chunk kernel; use cache='paged'")
+            # the draft keeps plain dense per-lane KV strips: rollback is
+            # a position reset (stale KV past the committed point is
+            # masked by kv_len and overwritten by the next draft), and a
+            # preempted lane just rebuilds by draft-prefill on resume —
+            # the draft's KV never needs to swap with the sequence
+            self.draft_kv = DenseKVCache(draft_model, n_lanes, max_len)
+            self.draft_pos = [0] * n_lanes   # tokens in the draft's cache
+            self._verify = jax.jit(model.speculative_step)
+            self._draft_decode = jax.jit(draft_model.decode_step)
+            self._draft_prefill = jax.jit(draft_model.prefill,
+                                          static_argnums=(3,))
         # run-time AT hook (repro.at): a tuning/dynamic.DecodeAutoTuner
         # routing each decode step through the per-bucket dynamic select
         # region (and, when chunked prefill is on, each prefill chunk
-        # through the per-(prompt-bucket x chunk) prefill region); None
-        # keeps the plain jit'd paths.
+        # through the per-(prompt-bucket x chunk) prefill region; with
+        # speculation, each verify through the per-bucket SpecBucket
+        # region); None keeps the plain jit'd paths.
         self.autotuner = autotuner
         self.active: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.steps = 0
         self.prefill_chunks = 0          # chunk-steps executed (chunked)
+        self.spec_ticks = 0              # speculative ticks executed
+        self.drafted_tokens = 0          # draft tokens offered to verify
+        self.accepted_tokens = 0         # draft tokens accepted
 
     # -- compat views -------------------------------------------------------
     @property
@@ -120,6 +165,19 @@ class ServingEngine:
         ``eos_id=None`` disables EOS stopping entirely."""
         return self.eos_id is not None and tok == self.eos_id
 
+    def _next_token(self, req: Request, logits) -> int:
+        """Pick the request's next token from one logits row through its
+        sampling params (greedy = exact argmax), keyed by the emission
+        index so fixed seeds are independent of lane/batch layout."""
+        return sampling.sample_token(np.asarray(logits), req.sampling,
+                                     len(req.out_tokens))
+
+    def _reset_draft(self, lane_id: int) -> None:
+        """Invalidate the draft's cache for a (re)occupied lane; the next
+        speculative tick rebuilds it with one draft prefill."""
+        if self.spec_k is not None:
+            self.draft_pos[lane_id] = 0
+
     def _preempt_lane(self, lane_id: int, priority: bool = False) -> None:
         lane = self.scheduler.lanes[lane_id]
         req = self.active.pop(lane.rid)
@@ -138,6 +196,7 @@ class ServingEngine:
                     return                 # no pages yet; retry next step
                 self.scheduler.occupy(lane_id, item.req, item.pos,
                                       item.remaining, phase=item.phase)
+                self._reset_draft(lane_id)
                 self.active[item.req.rid] = item.req
                 continue
             req = item
@@ -151,6 +210,7 @@ class ServingEngine:
                     return                 # page pressure; stay queued
                 self.scheduler.occupy(lane_id, req, 0, req.max_new_tokens,
                                       phase="prefill")
+                self._reset_draft(lane_id)
                 self.active[req.rid] = req
                 continue
             if isinstance(self.kv, PagedKVCache) \
@@ -164,13 +224,14 @@ class ServingEngine:
             if not self.kv.admit(lane_id, cache1, len(req.prompt)):
                 self.scheduler.push_back(kind, req)
                 return
-            tok = int(jnp.argmax(logits[0]))
+            tok = self._next_token(req, logits[0])
             now = time.time()
             req.out_tokens.append(tok)
             req.first_token_t = now
             req.token_ts.append(now)
             self.scheduler.occupy(lane_id, req, len(req.prompt),
                                   req.max_new_tokens - 1)
+            self._reset_draft(lane_id)
             self.active[req.rid] = req
             if req.max_new_tokens <= 1 or self._is_eos(tok):
                 self._finish(lane_id, req, now)
@@ -217,7 +278,7 @@ class ServingEngine:
             lane.pos = end
             if end < plen:
                 continue                   # prompt still streaming in
-            tok = int(jnp.argmax(logits[0]))
+            tok = self._next_token(req, logits[0])
             now = time.time()
             req.out_tokens.append(tok)
             req.first_token_t = now
@@ -244,6 +305,220 @@ class ServingEngine:
                     "can be evicted")
             self._preempt_lane(lane_id, priority=True)
 
+    # -- speculative decode: draft, verify, accept, roll back ---------------
+    def _spec_capacity(self) -> tuple[dict[int, int], int]:
+        """Per-lane effective draft length for this tick, plus the
+        sequence-length key the tick's SpecBucket routing must reuse.
+
+        ``k_eff`` is ``spec_k`` clamped by the lane's remaining token
+        budget (a tick may emit at most ``remaining`` tokens), by
+        ``max_len`` (the verify step writes KV at ``pos .. pos + k_eff``),
+        and by page availability — on page pressure the chunk shrinks
+        toward a plain decode step before the lane is evicted.
+
+        The key is computed ONCE here and returned so that the region
+        that capped the drafting is exactly the region that verifies it
+        — recomputing it after this loop's page-pressure preemptions
+        could land on a different bucket.
+        """
+        seq = max((self.scheduler.lanes[j].pos + 1
+                   for j in self.scheduler.decode_lanes()), default=1)
+        cap = self.spec_k
+        if self.autotuner is not None \
+                and getattr(self.autotuner, "spec_regions", None):
+            # once the bucket's region has committed, stop drafting past
+            # the winner's accept window — those draft-decode steps buy
+            # tokens the committed verify would never even look at
+            cap = self.autotuner.spec_draft_k(seq, self.spec_k)
+        k_eff: dict[int, int] = {}
+        for i in list(self.scheduler.decode_lanes()):
+            lane = self.scheduler.lanes[i]
+            ke = max(0, min(cap, lane.remaining - 1,
+                            self.max_len - 1 - lane.pos))
+            while ke >= 0 and not self.kv.ensure_tokens(
+                    i, lane.pos + ke + 1):
+                ke -= 1
+            if ke < 0:
+                if len(self.active) == 1:
+                    raise RuntimeError(
+                        f"page pool too small: sequence {lane.rid} needs "
+                        f"another page at pos {lane.pos} and no other "
+                        "lane can be evicted")
+                self._preempt_lane(i, priority=True)
+                continue
+            k_eff[i] = ke
+        return k_eff, seq
+
+    def _draft_propose(self, k_eff: dict[int, int]
+                       ) -> tuple[dict, dict]:
+        """Propose up to ``k_eff[i]`` draft tokens per decoding lane.
+
+        The draft's dense cache trails the committed sequence; a lane
+        whose cache is empty or far behind (fresh admission, resume after
+        preemption) catches up with ONE draft prefill over the committed
+        tokens, otherwise the 1-2 missing tokens (the previous tick's
+        un-fed last draft and/or bonus token) feed through the batched
+        draft decode step along with the proposals themselves.  Lanes
+        with nothing to feed ride the fixed-shape batch masked to the
+        dead slot ``max_len - 1`` (never read: live lanes finish at
+        ``max_len - 2``).  Returns ({lane: [draft tokens]},
+        {lane: [draft probs]}).
+        """
+        drafts: dict[int, list[int]] = {i: [] for i in k_eff}
+        dprobs: dict[int, list] = {i: [] for i in k_eff}
+        pending: dict[int, list[int]] = {}
+        rngs: dict[int, np.random.Generator] = {}
+        sps = {}
+        for i, ke in k_eff.items():
+            if ke == 0:
+                continue
+            lane = self.scheduler.lanes[i]
+            req = self.active[lane.rid]
+            sps[i] = req.sampling
+            rngs[i] = sampling.draft_rng(req.sampling, len(req.out_tokens))
+            all_toks = req.prompt + req.out_tokens   # len == lane.pos + 1
+            gap = len(all_toks) - self.draft_pos[i]
+            if self.draft_pos[i] == 0 or gap > 2:
+                # variable-length trace, like the admission prefill: one
+                # retrace per distinct committed length (known cost; a
+                # fixed-shape draft catch-up would need a logit_idx-style
+                # padded prefill)
+                logits_d, dcache = self._draft_prefill(
+                    self.draft_params,
+                    jnp.asarray([all_toks], jnp.int32), None, self.max_len)
+                self.draft_kv.admit(i, dcache, len(all_toks))
+                self.draft_pos[i] = len(all_toks)
+                tok, q = sampling.propose_token(
+                    np.asarray(logits_d[0]), sps[i], rngs[i])
+                drafts[i].append(tok)
+                dprobs[i].append(q)
+                pending[i] = []
+            else:
+                pending[i] = all_toks[self.draft_pos[i]:]
+        while True:
+            feed: dict[int, int] = {}
+            for i, ke in k_eff.items():
+                if ke == 0:
+                    continue
+                if pending[i]:
+                    feed[i] = pending[i][0]
+                elif 0 < len(drafts[i]) < ke:
+                    feed[i] = drafts[i][-1]   # extend the draft chain
+            if not feed:
+                break
+            token = np.zeros((self.n_lanes, 1), np.int32)
+            pos = np.full((self.n_lanes,), self.max_len - 1, np.int32)
+            for i, t in feed.items():
+                token[i, 0] = t
+                pos[i] = self.draft_pos[i]
+            logits_d, self.draft_kv.caches = self._draft_decode(
+                self.draft_params, self.draft_kv.caches,
+                jnp.asarray(token), jnp.asarray(pos))
+            logits_np = np.asarray(logits_d)
+            for i in feed:
+                self.draft_pos[i] += 1
+                if pending[i]:
+                    pending[i].pop(0)
+                    if pending[i]:
+                        continue           # still catching up
+                tok, q = sampling.propose_token(logits_np[i], sps[i],
+                                                rngs[i])
+                drafts[i].append(tok)
+                dprobs[i].append(q)
+        return drafts, dprobs
+
+    def _spec_tick(self) -> None:
+        """One speculative decode tick over the decoding lanes.
+
+        Draft proposes, the target verifies the whole candidate chunk in
+        one batched ``speculative_step`` (KV for every candidate is
+        written into the pages), the accept rule emits 1..k+1 tokens per
+        lane, and ``truncate_to`` returns the pages past the committed
+        point to the pool.  Mid-prefill lanes ride along masked to the
+        null page exactly as in the plain decode step.
+        """
+        k_eff, seq = self._spec_capacity()
+        decoding = self.scheduler.decode_lanes()
+        if not decoding:
+            return
+        drafts, dprobs = self._draft_propose(k_eff)
+        c = self.spec_k + 1
+        tokens = np.zeros((self.n_lanes, c), np.int32)
+        start = np.zeros((self.n_lanes,), np.int32)
+        kv_len = np.zeros((self.n_lanes,), np.int32)
+        for i in decoding:
+            lane = self.scheduler.lanes[i]
+            req = self.active[lane.rid]
+            row = [req.out_tokens[-1]] + drafts[i]
+            tokens[i, :len(row)] = row
+            start[i] = lane.pos
+            kv_len[i] = lane.pos + len(row)
+        extra = self.kv.decode_extra(
+            mask_lanes=self.scheduler.prefill_lanes())
+        args = (self.params, self.kv.caches, *extra,
+                jnp.asarray(tokens), jnp.asarray(start),
+                jnp.asarray(kv_len))
+        if self.autotuner is not None \
+                and getattr(self.autotuner, "spec_regions", None):
+            # seq is the key _spec_capacity capped the drafting with —
+            # reusing it (not recomputing post-preemption) keeps the
+            # capping and verifying region the same
+            out = self.autotuner.spec(
+                seq, *args, measure=not self.autotuner.spec_committed(seq))
+            if isinstance(out, dict):
+                # tuned variants return an env dict so the region can
+                # commit on time_per_token rather than raw call latency
+                logits, new_caches = out["logits"], out["caches"]
+            else:
+                logits, new_caches = out
+        else:
+            logits, new_caches = self._verify(*args)
+        self.kv.caches = new_caches
+        logits_np = np.asarray(logits)
+        # a tuner variant may verify a narrower chunk (tuned k): drafts
+        # past its window are auto-rejected — their KV was never written
+        window_max = logits_np.shape[1] - 1
+        now = time.time()
+        self.steps += 1
+        self.spec_ticks += 1
+        for i in decoding:
+            lane = self.scheduler.lanes[i]
+            req = self.active[lane.rid]
+            w = min(len(drafts[i]), window_max)
+            emitted, n_acc = sampling.speculative_accept(
+                drafts[i][:w], dprobs[i][:w], logits_np[i, :w + 1],
+                req.sampling, len(req.out_tokens))
+            self.drafted_tokens += w
+            self.accepted_tokens += n_acc
+            committed = lane.pos + n_acc + 1
+            self.kv.truncate_to(i, committed)
+            emit = []
+            for tok in emitted:
+                emit.append(tok)
+                if self._is_eos(tok):
+                    break
+            req.out_tokens.extend(emit)
+            req.token_ts.extend([now] * len(emit))
+            lane.pos = committed
+            lane.remaining -= len(emit)
+            lane.steps_served += 1
+            lane.tokens_served += len(emit)
+            self.draft_pos[i] = min(self.draft_pos[i], committed)
+            if lane.remaining <= 0 or self._is_eos(emit[-1]) \
+                    or lane.pos >= self.max_len - 1:
+                self._finish(i, req, now)
+
+    def spec_stats(self) -> dict:
+        """Speculation counters (zeros when speculation is off)."""
+        return {
+            "spec_k": self.spec_k,
+            "spec_ticks": self.spec_ticks,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "accept_rate": (self.accepted_tokens / self.drafted_tokens
+                            if self.drafted_tokens else 0.0),
+        }
+
     # -- one scheduler tick: prefill chunks + one decode step ---------------
     def step(self) -> None:
         victim = self.scheduler.pick_victim()
@@ -251,6 +526,9 @@ class ServingEngine:
             self._preempt_lane(victim)
         self._admit()
         self._prefill_tick()
+        if self.spec_k is not None:
+            self._spec_tick()
+            return
         self._ensure_capacity()
         decoding = self.scheduler.decode_lanes()
         if not decoding:
@@ -275,18 +553,21 @@ class ServingEngine:
         else:
             logits, new_caches = self._decode(*args)
         self.kv.caches = new_caches
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        logits_np = np.asarray(logits)
+        reqs = [self.active[self.scheduler.lanes[i].rid] for i in decoding]
+        toks = sampling.sample_batch(
+            logits_np[decoding], [r.sampling for r in reqs],
+            [len(r.out_tokens) for r in reqs])
         now = time.time()
         self.steps += 1
-        for i in decoding:
+        for i, req, tok in zip(decoding, reqs, toks):
             lane = self.scheduler.lanes[i]
-            req = self.active[lane.rid]
-            tok = int(nxt[i])
             req.out_tokens.append(tok)
             req.token_ts.append(now)
             lane.pos += 1
             lane.remaining -= 1
             lane.steps_served += 1
+            lane.tokens_served += 1
             if lane.remaining <= 0 or self._is_eos(tok) \
                     or lane.pos >= self.max_len - 1:
                 self._finish(i, req, now)

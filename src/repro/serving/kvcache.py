@@ -95,6 +95,12 @@ class DenseKVCache:
         the lane's strip is pre-sized)."""
         return n_tokens <= self.max_len
 
+    def truncate_to(self, lane: int, committed_len: int) -> int:
+        """Speculative rollback (no-op when dense: the lane's strip is
+        pre-sized and stale KV past ``committed_len`` is masked by the
+        decode step's ``kv_len``).  Returns pages freed (always 0)."""
+        return 0
+
     def release(self, lane: int) -> None:
         pass
 
@@ -238,6 +244,25 @@ class PagedKVCache:
             self.table[lane, self.n_blocks[lane]] = page[0]
             self.n_blocks[lane] += 1
         return True
+
+    def truncate_to(self, lane: int, committed_len: int) -> int:
+        """Speculative rollback: return the lane's over-allocated pages.
+
+        Keeps exactly the pages covering positions ``[0, committed_len)``
+        and frees the rest back to the pool, pointing the vacated page-
+        table rows at the null page.  KV *within* the last kept page past
+        ``committed_len`` may be stale (rejected drafts) — that is fine:
+        reads mask by ``kv_len`` and the next accepted token overwrites
+        its slot.  Returns the number of pages freed.
+        """
+        keep = math.ceil(committed_len / self.page_size)
+        nblk = self.n_blocks[lane]
+        if keep >= nblk:
+            return 0
+        self._free.extend(int(p) for p in self.table[lane, keep:nblk])
+        self.table[lane, keep:nblk] = NULL_PAGE
+        self.n_blocks[lane] = keep
+        return nblk - keep
 
     def release(self, lane: int) -> None:
         self._free_lane(lane)

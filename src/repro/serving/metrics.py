@@ -8,9 +8,17 @@ aggregates the serving-latency quartet every inference stack reports:
 * **ITL** — inter-token latency during decode;
 * **tokens/s** and **requests/s** over the serving window.
 
-p50/p99 come from ``numpy.percentile``; with CPU-proxy step counts the
-absolute numbers are placeholders, but the aggregation pipeline is the
-one the TPU path will feed.
+p50/p99 use :func:`percentile` — ``numpy.percentile`` with
+``method='linear'`` passed explicitly and the results pinned by a unit
+test, so the gate's numbers cannot silently track a change in numpy's
+default method.  Interpolation matters on tiny samples: serving smoke
+runs aggregate a handful of requests, and under a nearest-rank
+definition p99 of a 5-element series is just the max while p50 snaps to
+whichever sample sits at the cut — percentiles would jump a full
+sample-gap per added request, which is exactly what the bench
+regression gate diffs.  With CPU-proxy step counts the absolute numbers
+are placeholders, but the aggregation pipeline is the one the TPU path
+will feed.
 """
 from __future__ import annotations
 
@@ -19,13 +27,26 @@ import numpy as np
 from .scheduler import Request
 
 
+def percentile(xs, q: float) -> float | None:
+    """The ``q``-th percentile with linear interpolation between the two
+    nearest order statistics (``method='linear'`` passed explicitly, so
+    the serving gate's numbers do not track numpy's default method).
+    None on empty input; q outside [0, 100] raises.
+    """
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    arr = [float(x) for x in xs]
+    if not arr:
+        return None
+    return float(np.percentile(arr, q, method="linear"))
+
+
 def _pcts(xs: list[float]) -> dict:
     if not xs:
         return {"p50": None, "p99": None, "mean": None}
-    arr = np.asarray(xs, np.float64)
-    return {"p50": float(np.percentile(arr, 50)),
-            "p99": float(np.percentile(arr, 99)),
-            "mean": float(arr.mean())}
+    return {"p50": percentile(xs, 50),
+            "p99": percentile(xs, 99),
+            "mean": float(np.asarray(xs, np.float64).mean())}
 
 
 class ServingMetrics:

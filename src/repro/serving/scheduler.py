@@ -34,12 +34,15 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
+from .sampling import SamplingParams
+
 
 @dataclass
 class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int = 16
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
     submit_t: float = field(default_factory=time.time)
@@ -56,6 +59,8 @@ class LaneState:
     #                            prefill: prompt tokens committed so far
     remaining: int = 0         # decode-token budget left
     steps_served: int = 0      # decode steps since (re-)admission
+    tokens_served: int = 0     # tokens emitted since (re-)admission (a
+    #                            speculative tick emits several per step)
     phase: str = "decode"      # "prefill" while the prompt streams in
 
 
@@ -134,12 +139,17 @@ class Scheduler:
     # -- preemption ---------------------------------------------------------
     def pick_victim(self) -> int | None:
         """Time-slice policy: with work queued, preempt the longest-served
-        lane once it has used up its slice.  Returns a lane id or None."""
+        lane once it has used up its slice.  Service is counted in both
+        decode steps and emitted tokens — a speculative tick emits several
+        tokens per step, and the larger of the two counts is what burns
+        the slice (variable tokens-per-tick can't stretch a lane's turn).
+        Returns a lane id or None."""
         if self.timeslice is None or not self.has_queued:
             return None
-        served = [(l.steps_served, i) for i, l in enumerate(self.lanes)
+        served = [(max(l.steps_served, l.tokens_served), i)
+                  for i, l in enumerate(self.lanes)
                   if l.rid is not None and l.phase == "decode"
-                  and l.steps_served >= self.timeslice]
+                  and max(l.steps_served, l.tokens_served) >= self.timeslice]
         if not served:
             return None
         return max(served)[1]

@@ -19,6 +19,15 @@ Chunked prefill adds a second tunable region family
 ``flash_paged_prefill`` tile assignments (block_q × block_k) — the
 prefill hot path becomes a tuning region exactly like decode did.
 
+Speculative decoding adds a third (:meth:`DecodeAutoTuner.add_spec`):
+one ``SpecBucket_{b}`` ``dynamic select`` per sequence-length bucket over
+the (k × verify block_q × block_k) product — the accept/reject policy's
+window k is itself a tuned parameter (Xabclib-style fully auto-tuned
+policy selection), alongside the verify kernel's tile.  A variant with a
+smaller k verifies a narrower chunk of the drafted tokens; greedy output
+is bit-identical for every k, so the region is free to measure and
+commit whichever trades acceptance against verify cost best per bucket.
+
 Declared through the ``repro.at`` session: committed winners (decode and
 prefill alike) persist in the session's record store, so a restarted
 server starts every bucket already committed (no first-call tuning
@@ -68,6 +77,10 @@ class DecodeAutoTuner:
         self.prefill_variants: list[tuple] = []
         self.prefill_param_names: tuple = ()
         self.prefill_regions: dict[tuple[int, int], object] = {}
+        self.spec_buckets: tuple = ()
+        self.spec_variants: list[tuple] = []
+        self.spec_param_names: tuple = ()
+        self.spec_regions: dict[int, object] = {}
         self.session.run("dynamic",
                          [f"DecodeBucket_{b}" for b in buckets])
 
@@ -101,9 +114,75 @@ class DecodeAutoTuner:
                 names.append(name)
         self.session.run("dynamic", names)
 
+    # -- speculative region (draft + verify) ---------------------------------
+    def add_spec(self, make_verify: Callable[..., Callable],
+                 ks=(4,), buckets=(512, 2048, 8192),
+                 block_qs=(8,), block_ks=(256,),
+                 according: str | None = "min (time_per_token)") -> None:
+        """Declare the speculative-verify tuning region family.
+
+        One ``SpecBucket_{b}`` ``dynamic select`` per sequence-length
+        bucket; alternatives are built by ``make_verify(k, block_q,
+        block_k)`` — the (k × verify tile) product space.  A variant's k
+        may be smaller than the engine's drafting width: it verifies (and
+        can accept) only the first k drafts, which is exactly the
+        accept-window policy the region is tuning.
+
+        Raw per-call latency would degenerately prefer the smallest k
+        (narrower verify chunk, fewer tokens out), so the default
+        ``according`` criterion commits on ``time_per_token`` instead —
+        variants report their measured call time divided by the tokens
+        the accept rule emits (the paper's ``min (eps)`` form with a
+        throughput-normalised eps).  Variants that return a plain value
+        fall back to wall-clock.  Winners commit per bucket and persist
+        in the session's record store next to the decode and prefill
+        winners (warm restart = zero re-tuning).
+        """
+        self.spec_buckets = tuple(buckets)
+        self.spec_param_names = ("k", "block_q", "block_k")
+        self.spec_variants = [(k, bq, bk) for k in ks for bq in block_qs
+                              for bk in block_ks]
+        names = []
+        for b in buckets:
+            name = f"SpecBucket_{b}"
+            sel = self.session.autotune("dynamic", "select", name=name,
+                                        according=according)
+            for var in self.spec_variants:
+                label = ",".join(f"{k}={v}"
+                                 for k, v in zip(self.spec_param_names, var))
+                sel.alternative(name=label)(make_verify(*var))
+            self.spec_regions[b] = sel.region
+            names.append(name)
+        self.session.run("dynamic", names)
+
     def decode(self, kv_len: int, *args, **kwargs):
         b = length_bucket(kv_len, self.buckets)
         return self.session.execute(f"DecodeBucket_{b}", *args, **kwargs)
+
+    def spec(self, kv_len: int, *args, **kwargs):
+        """Route one speculative verify through its bucket's region."""
+        b = length_bucket(kv_len, self.spec_buckets)
+        return self.session.execute(f"SpecBucket_{b}", *args, **kwargs)
+
+    def spec_committed(self, kv_len: int) -> bool:
+        """Has this bucket's SpecBucket region committed a winner?  The
+        engine uses this to stop paying per-call measurement overhead
+        (device sync + host-side acceptance proxy) once tuning is done."""
+        b = length_bucket(kv_len, self.spec_buckets)
+        st = self.ctx.dynamic_state.get(f"SpecBucket_{b}")
+        return st is not None and st.committed is not None
+
+    def spec_draft_k(self, kv_len: int, default: int) -> int:
+        """How many tokens are worth drafting for this bucket: the
+        committed variant's accept window k, or ``default`` while the
+        bucket is still measuring (every candidate, including the widest,
+        must stay measurable).  Lets the engine stop paying draft-decode
+        steps for tokens the committed verify would never accept."""
+        b = length_bucket(kv_len, self.spec_buckets)
+        st = self.ctx.dynamic_state.get(f"SpecBucket_{b}")
+        if st is None or st.committed is None:
+            return default
+        return min(default, self.spec_variants[st.committed][0])
 
     def prefill(self, prompt_len: int, chunk_size: int, *args, **kwargs):
         """Route one prefill chunk through its (bucket × chunk) region."""
@@ -136,4 +215,17 @@ class DecodeAutoTuner:
             out[key] = None if idx is None \
                 else dict(zip(self.prefill_param_names,
                               self.prefill_variants[idx]))
+        return out
+
+    def committed_spec(self) -> dict[int, int | None]:
+        return {b: self.ctx.dynamic_state[f"SpecBucket_{b}"].committed
+                for b in self.spec_regions}
+
+    def committed_spec_params(self) -> dict[int, dict | None]:
+        """Committed speculative winners as (k, block_q, block_k)
+        assignments per sequence-length bucket."""
+        out: dict[int, dict | None] = {}
+        for b, idx in self.committed_spec().items():
+            out[b] = None if idx is None \
+                else dict(zip(self.spec_param_names, self.spec_variants[idx]))
         return out

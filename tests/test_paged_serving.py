@@ -382,3 +382,19 @@ class TestMetrics:
     def test_empty_summary(self):
         s = ServingMetrics().summary()
         assert s["requests"] == 0 and s["ttft_s"]["p50"] is None
+
+    def test_percentile_interpolates_on_tiny_samples(self):
+        """Pinned 5-element series: linear interpolation between order
+        statistics, not nearest-rank (which would report p99 == max and
+        snap p50 to a sample)."""
+        from repro.serving.metrics import percentile
+        xs = [30.0, 10.0, 50.0, 20.0, 40.0]     # unsorted on purpose
+        assert percentile(xs, 50) == pytest.approx(30.0)
+        assert percentile(xs, 99) == pytest.approx(49.6)   # not 50.0
+        assert percentile(xs, 0) == pytest.approx(10.0)
+        assert percentile(xs, 100) == pytest.approx(50.0)
+        assert percentile(xs, 25) == pytest.approx(20.0)
+        assert percentile([7.0], 99) == pytest.approx(7.0)
+        assert percentile([], 50) is None
+        with pytest.raises(ValueError):
+            percentile(xs, 101)

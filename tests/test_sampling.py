@@ -1,0 +1,168 @@
+"""Property tests for the serving sampling stack (Hypothesis).
+
+Pinned properties (ISSUE 4 satellite):
+
+* filtered distributions renormalize to 1;
+* top-k / top-p sampling never emits an out-of-support token;
+* temperature -> 0 converges to argmax;
+* a fixed seed reproduces the same tokens across batch layouts.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.sampling import (SamplingParams, filtered_probs,
+                                    sample_batch, sample_token,
+                                    speculative_accept)
+
+VOCAB = 32
+
+
+def logits_strategy(v=VOCAB):
+    return st.lists(st.floats(-8.0, 8.0, allow_nan=False,
+                              allow_infinity=False, width=32),
+                    min_size=v, max_size=v).map(np.asarray)
+
+
+params_strategy = st.builds(
+    SamplingParams,
+    temperature=st.floats(0.05, 3.0),
+    top_k=st.integers(0, VOCAB),
+    top_p=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+
+
+class TestFilteredProbs:
+    @settings(max_examples=60, deadline=None)
+    @given(logits=logits_strategy(), sp=params_strategy)
+    def test_renormalizes_to_one(self, logits, sp):
+        p = filtered_probs(logits, sp)
+        assert p.shape == (VOCAB,)
+        assert np.all(p >= 0.0)
+        assert p.sum() == pytest.approx(1.0, abs=1e-9)
+
+    @settings(max_examples=60, deadline=None)
+    @given(logits=logits_strategy(), sp=params_strategy)
+    def test_greedy_limit_is_argmax_onehot(self, logits, sp):
+        g = SamplingParams(temperature=0.0, top_k=sp.top_k, top_p=sp.top_p,
+                           seed=sp.seed)
+        p = filtered_probs(logits, g)
+        assert p[int(np.argmax(logits))] == 1.0
+        assert p.sum() == 1.0
+
+
+class TestSupport:
+    @settings(max_examples=60, deadline=None)
+    @given(logits=logits_strategy(), k=st.integers(1, VOCAB),
+           seed=st.integers(0, 2 ** 31 - 1),
+           counter=st.integers(0, 64))
+    def test_top_k_never_leaves_support(self, logits, k, seed, counter):
+        sp = SamplingParams(temperature=1.0, top_k=k, seed=seed)
+        tok = sample_token(logits, sp, counter)
+        p1 = np.exp(logits - logits.max())
+        support = set(np.argsort(-p1, kind="stable")[:k].tolist())
+        assert tok in support
+
+    @settings(max_examples=60, deadline=None)
+    @given(logits=logits_strategy(), top_p=st.floats(0.05, 0.95),
+           seed=st.integers(0, 2 ** 31 - 1),
+           counter=st.integers(0, 64))
+    def test_top_p_never_leaves_support(self, logits, top_p, seed, counter):
+        sp = SamplingParams(temperature=1.0, top_p=top_p, seed=seed)
+        tok = sample_token(logits, sp, counter)
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        order = np.argsort(-p, kind="stable")
+        cut = int(np.searchsorted(np.cumsum(p[order]), top_p)) + 1
+        assert tok in set(order[:cut].tolist())
+
+    @settings(max_examples=40, deadline=None)
+    @given(logits=logits_strategy(), sp=params_strategy,
+           counter=st.integers(0, 64))
+    def test_sampled_token_has_positive_filtered_prob(self, logits, sp,
+                                                      counter):
+        tok = sample_token(logits, sp, counter)
+        assert filtered_probs(logits, sp)[tok] > 0.0
+
+
+class TestTemperatureLimit:
+    @settings(max_examples=60, deadline=None)
+    @given(logits=logits_strategy(), seed=st.integers(0, 2 ** 31 - 1),
+           counter=st.integers(0, 64))
+    def test_temperature_to_zero_converges_to_argmax(self, logits, seed,
+                                                     counter):
+        # quantize to a 0.25 grid then de-tie, so every pairwise gap is
+        # >= 1e-3 and the cold distribution is numerically a one-hot
+        logits = np.round(logits * 4.0) / 4.0 + np.arange(VOCAB) * 1e-3
+        want = int(np.argmax(logits))
+        cold = SamplingParams(temperature=1e-5, seed=seed)
+        assert sample_token(logits, cold, counter) == want
+        greedy = SamplingParams(temperature=0.0, seed=seed)
+        assert sample_token(logits, greedy, counter) == want
+
+
+class TestSeedReproducibility:
+    @settings(max_examples=30, deadline=None)
+    @given(seeds=st.lists(st.integers(0, 2 ** 31 - 1), min_size=2,
+                          max_size=6),
+           counter=st.integers(0, 64),
+           data=st.data())
+    def test_fixed_seed_across_batch_layouts(self, seeds, counter, data):
+        """The same request (seed, emission index) samples the same token
+        whether it sits in lane 0 of a small batch or lane n of a large,
+        permuted one."""
+        n = len(seeds)
+        rng = np.random.default_rng(0)
+        logits = rng.normal(size=(n, VOCAB))
+        params = [SamplingParams(temperature=0.9, top_k=12, top_p=0.9,
+                                 seed=s) for s in seeds]
+        counters = [counter + i for i in range(n)]
+        toks = sample_batch(logits, params, counters)
+        perm = data.draw(st.permutations(range(n)))
+        toks_perm = sample_batch(logits[perm],
+                                 [params[i] for i in perm],
+                                 [counters[i] for i in perm])
+        assert toks_perm == [toks[i] for i in perm]
+        # singleton layout agrees too
+        for i in range(n):
+            assert sample_token(logits[i], params[i], counters[i]) == toks[i]
+
+
+class TestSpeculativeAcceptProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data(), k=st.integers(1, 4),
+           seed=st.integers(0, 2 ** 31 - 1), counter=st.integers(0, 32))
+    def test_emits_accepted_prefix_plus_one(self, data, k, seed, counter):
+        sp = SamplingParams(temperature=1.0, seed=seed)
+        rng = np.random.default_rng(seed)
+        target = rng.normal(size=(k + 1, VOCAB))
+        drafts, qs = [], []
+        for _ in range(k):
+            q = filtered_probs(rng.normal(size=VOCAB), sp)
+            drafts.append(data.draw(st.integers(0, VOCAB - 1)))
+            qs.append(q)
+        emitted, a = speculative_accept(drafts, qs, target, sp, counter)
+        assert 0 <= a <= k
+        assert len(emitted) == a + 1
+        assert emitted[:a] == drafts[:a]
+        assert all(0 <= t < VOCAB for t in emitted)
+
+    @settings(max_examples=40, deadline=None)
+    @given(k=st.integers(1, 4), seed=st.integers(0, 2 ** 31 - 1),
+           counter=st.integers(0, 32))
+    def test_greedy_accepts_exactly_matching_prefix(self, k, seed, counter):
+        sp = SamplingParams(temperature=0.0)
+        rng = np.random.default_rng(seed)
+        target = rng.normal(size=(k + 1, VOCAB))
+        argmaxes = [int(np.argmax(target[i])) for i in range(k + 1)]
+        n_match = int(rng.integers(0, k + 1))
+        drafts = argmaxes[:n_match] \
+            + [(argmaxes[i] + 1) % VOCAB for i in range(n_match, k)]
+        emitted, a = speculative_accept(drafts, [None] * k, target, sp,
+                                        counter)
+        assert a == n_match
+        assert emitted == argmaxes[:n_match] + [argmaxes[n_match]]
