@@ -10,7 +10,10 @@ current run regresses past the thresholds:
   (default 25%);
 * a speculative cell's measured ``accept_rate`` falls to zero while the
   baseline's is positive (the draft/verify path stopped accepting —
-  speculation degenerated into pure overhead).
+  speculation degenerated into pure overhead);
+* a shared-prefix cell's measured ``prefix_hit_rate`` falls to zero
+  while the baseline's is positive (the hash index stopped matching —
+  every admission re-prefills its shared system prompt).
 
 An absolute TTFT slack (``--ttft-floor``, default 50 ms) absorbs
 scheduler jitter on cells whose TTFT is tiny: a rise only fails the gate
@@ -51,14 +54,17 @@ def cell_key(row: dict) -> tuple:
         row.get("workload", "uniform"),
         row.get("prefill_chunk"),
         row.get("spec_k"),
+        row.get("prefix_cache"),
     )
 
 
 def _fmt_key(key: tuple) -> str:
-    arch, cache, workload, chunk, spec_k = key
+    arch, cache, workload, chunk, spec_k, prefix_cache = key
     mode = f"/chunk={chunk}" if chunk else ""
     if spec_k is not None:
         mode += f"/k={spec_k}"
+    if prefix_cache is not None:
+        mode += f"/prefix={'on' if prefix_cache else 'off'}"
     return f"{arch}:{cache}:{workload}{mode}"
 
 
@@ -112,6 +118,13 @@ def compare(
             failures.append(
                 f"{name}: speculative accept rate fell to zero "
                 f"(baseline {b_ar:.1%}) — drafts are pure overhead"
+            )
+        b_hr, c_hr = base.get("prefix_hit_rate"), cur.get("prefix_hit_rate")
+        if b_hr and not c_hr:
+            failures.append(
+                f"{name}: prefix hit rate fell to zero "
+                f"(baseline {b_hr:.1%}) — the index stopped matching and "
+                f"every admission re-prefills its shared prompt"
             )
     return failures
 

@@ -15,6 +15,15 @@ stream into the paged cache N tokens per tick interleaved with decode,
 and the prefill tile space (block_q x block_k per prompt bucket) becomes
 a second run-time tuning region next to the decode buckets.
 
+``--prefix-cache`` (paged + chunked prefill) turns on content-addressed
+prefix caching: committed full pages publish into a hash index, new
+admissions seed their page tables with matching shared pages (refcounted,
+copy-on-write) and prefill only the uncached suffix.  With ``--autotune``
+the cache's reuse policy (min-match granularity x eviction strategy)
+becomes the ``PrefixPolicy`` tuning region.  ``--shared-prefix N`` makes
+the synthetic workload share an N-token system prompt so the index
+actually gets hits.
+
 ``--draft`` turns on speculative decoding (paged only): a reduced-depth
 draft sliced from the target's own layers proposes ``--spec-k`` tokens
 per tick and the target verifies them in one chunked call; with
@@ -40,12 +49,13 @@ import numpy as np
 from .. import at
 from ..configs import get_arch
 from ..models import build_model
-from ..serving import Request, SamplingParams, ServingEngine
+from ..serving import REDUCED_BUCKETS, Request, SamplingParams, ServingEngine
 
 
 def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                     prefill_chunk: int | None = None,
-                    spec_k: int | None = None):
+                    spec_k: int | None = None,
+                    prefix_cache: bool = False):
     """Per-bucket dynamic select over decode variants (repro.at session).
 
     Each candidate gets its own jit cache and publishes its block PPs
@@ -74,7 +84,7 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
             return variant
 
         tuner = DecodeAutoTuner(session, make_decode,
-                                buckets=(128, 512, 2048),
+                                buckets=REDUCED_BUCKETS,
                                 block_ks=(max(1, page_size // 2), page_size))
         if prefill_chunk is not None:
             def make_prefill(block_q, block_k):
@@ -90,7 +100,7 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
 
             tuner.add_prefill(
                 make_prefill, chunk_sizes=(prefill_chunk,),
-                buckets=(128, 512, 2048),
+                buckets=REDUCED_BUCKETS,
                 block_qs=(max(1, prefill_chunk // 2), prefill_chunk),
                 block_ks=(max(1, page_size // 2), page_size))
         if spec_k is not None:
@@ -144,9 +154,29 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
             tuner.add_spec(
                 make_verify,
                 ks=tuple(sorted({1, max(1, spec_k // 2), spec_k})),
-                buckets=(128, 512, 2048),
+                buckets=REDUCED_BUCKETS,
                 block_qs=(spec_k + 1,),
                 block_ks=(max(1, page_size // 2), page_size))
+        if prefix_cache:
+            # the cache's REUSE POLICY is the tuned object (minimum match
+            # granularity x eviction strategy): each alternative applies
+            # its knobs to the live pool and performs one real admission
+            # match.  Outputs are bit-identical under every policy, and
+            # the region commits on the smallest uncached PROMPT FRACTION
+            # (raw call latency would elect whichever policy matches
+            # nothing; unnormalized token counts would let prompt length
+            # pick the winner instead of the policy).
+            def make_policy(min_match, eviction):
+                def variant(kv, lane_id, prompt, min_match=min_match,
+                            eviction=eviction):
+                    kv.set_prefix_policy(min_match=min_match,
+                                         eviction=eviction)
+                    cached = kv.seed_prefix(lane_id, prompt)
+                    miss = (len(prompt) - cached) / max(len(prompt), 1)
+                    return {"cached": cached, "miss_fraction": miss}
+                return variant
+
+            tuner.add_prefix_policy(make_policy)
         return tuner
 
     def make_decode(block_k):
@@ -158,7 +188,7 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
         return variant
 
     return DecodeAutoTuner(session, make_decode,
-                           buckets=(128, 512, 2048),
+                           buckets=REDUCED_BUCKETS,
                            block_ks=(256, 512))
 
 
@@ -169,7 +199,8 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
           page_size: int = 16, timeslice: int | None = None,
           prefill_chunk: int | None = None, draft: bool = False,
           spec_k: int = 4, temperature: float = 0.0, top_k: int = 0,
-          top_p: float = 1.0) -> dict:
+          top_p: float = 1.0, prefix_cache: bool = False,
+          shared_prefix: int = 0) -> dict:
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -182,7 +213,8 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         draft_params = model.slice_draft_params(params, draft_model)
     tuner = _make_autotuner(model, workdir, cache, page_size,
                             prefill_chunk=prefill_chunk,
-                            spec_k=spec_k if draft else None) \
+                            spec_k=spec_k if draft else None,
+                            prefix_cache=prefix_cache) \
         if autotune else None
     engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
                            autotuner=tuner, cache=cache, n_pages=n_pages,
@@ -190,18 +222,33 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
                            prefill_chunk=prefill_chunk,
                            draft_model=draft_model,
                            draft_params=draft_params,
-                           spec_k=spec_k if draft else None)
+                           spec_k=spec_k if draft else None,
+                           prefix_cache=prefix_cache)
     rng = np.random.default_rng(seed)
+    # shared_prefix > 0 prepends one common system prompt to every
+    # request — the workload that makes the prefix cache earn its keep
+    prefix = rng.integers(0, cfg.vocab_size,
+                          size=shared_prefix).tolist() if shared_prefix \
+        else []
     for rid in range(n_requests):
-        prompt = rng.integers(0, cfg.vocab_size,
-                              size=rng.integers(4, prompt_len)).tolist()
+        prompt = prefix + rng.integers(
+            0, cfg.vocab_size, size=rng.integers(4, prompt_len)).tolist()
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=max_new,
                               sampling=SamplingParams(
                                   temperature=temperature, top_k=top_k,
                                   top_p=top_p, seed=seed + rid)))
-    finished = engine.run(max_steps=n_requests * (max_new + 4))
+    finished = engine.run(
+        max_steps=n_requests * (max_new + 4 + shared_prefix))
     summary = engine.metrics.summary()
+    prefix_stats = None
+    if prefix_cache:
+        kvp = engine.kv.stats().get("prefix", {})
+        prefix_stats = {**summary["prefix_cache"],
+                        "pages_saved": kvp.get("pages_saved", 0),
+                        "cow_copies": kvp.get("cow_copies", 0),
+                        "evictions": kvp.get("evictions", 0),
+                        "cached_pages": kvp.get("cached_pages", 0)}
     return {
         "finished": len(finished), "requests": n_requests,
         "decode_steps": engine.steps,
@@ -217,6 +264,7 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         "prefill_chunks": engine.prefill_chunks,
         "spec": engine.spec_stats() if draft else None,
         "cache": engine.kv.stats(),
+        "prefix_cache": prefix_stats,
         "committed_buckets": tuner.committed_params() if tuner else None,
         "committed_prefill": (
             {f"{b}_c{cs}": pp for (b, cs), pp
@@ -224,6 +272,9 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
             if tuner and tuner.prefill_regions else None),
         "committed_spec": (tuner.committed_spec_params()
                            if tuner and tuner.spec_regions else None),
+        "committed_prefix": (tuner.committed_prefix_params()
+                             if tuner and tuner.prefix_region is not None
+                             else None),
     }
 
 
@@ -252,6 +303,12 @@ def main() -> None:
                          "self-speculative draft (target's leading layers)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed per speculative tick")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged+chunked: content-addressed prefix caching "
+                         "(refcounted shared pages, copy-on-write)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one common N-token system prompt to "
+                         "every request (the prefix-cache workload)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -271,7 +328,8 @@ def main() -> None:
                 timeslice=args.timeslice, prefill_chunk=args.prefill_chunk,
                 draft=args.draft, spec_k=args.spec_k,
                 temperature=args.temperature, top_k=args.top_k,
-                top_p=args.top_p)
+                top_p=args.top_p, prefix_cache=args.prefix_cache,
+                shared_prefix=args.shared_prefix)
     def fmt(x, spec):
         return format(x, spec) if x is not None else "n/a"
 
@@ -281,6 +339,12 @@ def main() -> None:
         spec_note = (f", spec k={s['spec_k']} accept "
                      f"{s['accepted_tokens']}/{s['drafted_tokens']} "
                      f"({s['accept_rate']:.0%})")
+    if out["prefix_cache"] is not None:
+        p = out["prefix_cache"]
+        spec_note += (f", prefix hit {p['hit_requests']}/"
+                      f"{out['requests']} ({p['hit_rate']:.0%}, "
+                      f"{p['hit_tokens']} tok, "
+                      f"{p['pages_saved']} pages saved)")
     print(f"[serve] {out['finished']}/{out['requests']} requests, "
           f"{out['generated_tokens']} tokens in {out['wall_s']:.1f}s "
           f"({out['tokens_per_s']:.1f} tok/s, "

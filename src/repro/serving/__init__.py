@@ -4,13 +4,18 @@ dense KV cache, with run-time AT decode dispatch.
 Layers (see ``docs/SERVING.md``):
 
 * :mod:`.scheduler` — FIFO admission + preemptive continuous batching;
-* :mod:`.kvcache` — ``DenseKVCache`` / ``PagedKVCache`` backends;
+* :mod:`.kvcache` — ``DenseKVCache`` / ``PagedKVCache`` backends (the
+  paged pool optionally refcounted + content-addressed for prefix
+  caching);
+* :mod:`.buckets` — the shared length-bucket ladders every tuning
+  region family keys off;
 * :mod:`.sampling` — per-request temperature/top-k/top-p + the
   speculative accept/reject rule;
 * :mod:`.metrics` — TTFT / inter-token latency / throughput aggregation;
 * :mod:`.engine` — the orchestrator tying them to the model's decode
   step (plain, chunked-prefill, and speculative).
 """
+from .buckets import LENGTH_BUCKETS, REDUCED_BUCKETS
 from .engine import LaneState, Request, ServingEngine, length_bucket
 from .kvcache import DenseKVCache, PagedKVCache, make_kv_cache
 from .metrics import ServingMetrics
@@ -18,5 +23,6 @@ from .sampling import SamplingParams
 from .scheduler import Scheduler
 
 __all__ = ["ServingEngine", "Request", "LaneState", "length_bucket",
+           "LENGTH_BUCKETS", "REDUCED_BUCKETS",
            "DenseKVCache", "PagedKVCache", "make_kv_cache", "Scheduler",
            "ServingMetrics", "SamplingParams"]

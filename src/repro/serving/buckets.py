@@ -1,0 +1,21 @@
+"""The length-bucket ladders — ONE definition, imported everywhere.
+
+Run-time AT regions are keyed by sequence-length bucket
+(``DecodeBucket_{b}`` / ``PrefillBucket_{b}_c{c}`` / ``SpecBucket_{b}``),
+and the bucket a call routes to is whatever ladder the caller holds.
+These tables used to be hardcoded independently in ``serving/engine.py``,
+``tuning/dynamic.py`` and ``launch/serve.py`` — any drift between them
+silently mis-routes committed winners (a region tuned under one ladder is
+looked up under another and the wrong bucket answers).  Both ladders now
+live here and every layer imports them.
+
+* :data:`LENGTH_BUCKETS` — the full production ladder (kv lengths up to
+  32k); the default for :func:`repro.serving.length_bucket` and the
+  ``DecodeAutoTuner`` region families.
+* :data:`REDUCED_BUCKETS` — the CPU-proxy ladder the serving driver and
+  benchmarks tune over (reduced configs never exceed 2k).
+"""
+from __future__ import annotations
+
+LENGTH_BUCKETS: tuple[int, ...] = (128, 512, 2048, 8192, 32768)
+REDUCED_BUCKETS: tuple[int, ...] = (128, 512, 2048)

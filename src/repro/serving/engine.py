@@ -25,6 +25,15 @@ one batched decode step over the decoding lanes — long prompts stop
 head-of-line-blocking short requests (chunked prefill / continuous
 batching; see docs/SERVING.md for the tick anatomy).
 
+With ``prefix_cache=True`` (paged + chunked prefill) admissions first
+match the prompt against the pool's content-addressed prefix index: the
+lane's leading page-table rows are seeded with the shared pages
+(refcounted, copy-on-write) and chunked prefill starts at the first
+uncached token — a request behind an identical system prompt skips that
+prompt's prefill entirely, and TTFT drops by exactly the skipped chunks.
+Each committed full chunk-page is published back into the index.
+Outputs are bit-identical with caching on or off.
+
 With ``spec_k=k`` plus a draft model (paged only) the decode step is
 *speculative*: a small draft proposes up to k tokens per tick, the
 target scores all k+1 positions in ONE verify call (the chunked-prefill
@@ -46,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import sampling
+from .buckets import LENGTH_BUCKETS
 from .kvcache import DenseKVCache, PagedKVCache, make_kv_cache
 from .metrics import ServingMetrics
 from .scheduler import LaneState, Request, Scheduler
@@ -53,7 +63,7 @@ from .scheduler import LaneState, Request, Scheduler
 __all__ = ["ServingEngine", "Request", "LaneState", "length_bucket"]
 
 
-def length_bucket(n: int, buckets=(128, 512, 2048, 8192, 32768)) -> int:
+def length_bucket(n: int, buckets=LENGTH_BUCKETS) -> int:
     for b in buckets:
         if n <= b:
             return b
@@ -70,18 +80,28 @@ class ServingEngine:
                  page_size: int = 16, timeslice: int | None = None,
                  prefill_chunk: int | None = None,
                  draft_model=None, draft_params=None,
-                 spec_k: int | None = None):
+                 spec_k: int | None = None,
+                 prefix_cache: bool = False,
+                 prefix_min_match: int = 1,
+                 prefix_eviction: str = "lru"):
         self.model = model
         self.params = params
         self.n_lanes = n_lanes
         self.max_len = max_len
         self.eos_id = eos_id
         self.kv = make_kv_cache(model, cache, n_lanes, max_len,
-                                n_pages=n_pages, page_size=page_size)
+                                n_pages=n_pages, page_size=page_size,
+                                prefix_cache=prefix_cache,
+                                prefix_min_match=prefix_min_match,
+                                prefix_eviction=prefix_eviction)
         if prefill_chunk is not None and self.kv.kind != "paged":
             raise ValueError(
                 "chunked prefill streams the prompt into the paged KV "
                 "cache; use cache='paged' (dense keeps monolithic prefill)")
+        if prefix_cache and prefill_chunk is None:
+            raise ValueError(
+                "prefix caching admits at the first uncached token via "
+                "chunked prefill; pass prefill_chunk")
         self.prefill_chunk = prefill_chunk
         self.scheduler = Scheduler(n_lanes, timeslice=timeslice)
         self.metrics = ServingMetrics()
@@ -178,6 +198,26 @@ class ServingEngine:
         if self.spec_k is not None:
             self.draft_pos[lane_id] = 0
 
+    def _seed_prefix(self, lane_id: int, req: Request) -> int:
+        """Match + seed one admission through the prefix cache, routed
+        through the ``PrefixPolicy`` dynamic-select region when a tuner
+        declares one (the region's alternatives apply their
+        (min-match x eviction) knobs before seeding; outputs are
+        bit-identical under every policy, so the region measures freely).
+        Returns the prefill start position and stamps the request."""
+        if not getattr(self.kv, "prefix_cache", False):
+            return 0
+        if self.autotuner is not None \
+                and getattr(self.autotuner, "prefix_region", None) \
+                is not None:
+            out = self.autotuner.prefix_policy(self.kv, lane_id,
+                                               req.prompt)
+            cached = out["cached"] if isinstance(out, dict) else int(out)
+        else:
+            cached = self.kv.seed_prefix(lane_id, req.prompt)
+        req.cached_tokens = cached
+        return cached
+
     def _preempt_lane(self, lane_id: int, priority: bool = False) -> None:
         lane = self.scheduler.lanes[lane_id]
         req = self.active.pop(lane.rid)
@@ -208,8 +248,13 @@ class ServingEngine:
                 if not self.kv.can_admit(first):
                     self.scheduler.push_back(kind, req)
                     return                 # page pressure; stay queued
-                self.scheduler.occupy(lane_id, req, 0, req.max_new_tokens,
-                                      phase="prefill")
+                # prefix caching: match the prompt against the hash index
+                # and seed the lane's leading page-table rows with the
+                # shared pages — prefill then starts at the first uncached
+                # token (TTFT shrinks by exactly the skipped chunks)
+                cached = self._seed_prefix(lane_id, req)
+                self.scheduler.occupy(lane_id, req, cached,
+                                      req.max_new_tokens, phase="prefill")
                 self._reset_draft(lane_id)
                 self.active[req.rid] = req
                 continue
@@ -225,7 +270,7 @@ class ServingEngine:
                 self.scheduler.push_back(kind, req)
                 return
             tok = self._next_token(req, logits[0])
-            now = time.time()
+            now = time.monotonic()
             req.out_tokens.append(tok)
             req.first_token_t = now
             req.token_ts.append(now)
@@ -254,7 +299,12 @@ class ServingEngine:
             req = self.active[lane.rid]
             plen = len(req.prompt)
             start, end = lane.pos, min(lane.pos + c, plen)
-            if not self.kv.ensure_tokens(lane_id, end):
+            # the COW guard covers the seeded-prefix edge: a fully-cached
+            # page-aligned prompt starts prefill at plen-1, *inside* the
+            # last shared page, which must be privately copied before the
+            # recomputed KV write lands
+            if not self.kv.ensure_tokens(lane_id, end) \
+                    or not self.kv.cow_writable(lane_id, start):
                 if len(self.active) == 1:
                     raise RuntimeError(
                         f"page pool too small: sequence {lane.rid} needs "
@@ -276,10 +326,13 @@ class ServingEngine:
             self.kv.caches = new_caches
             self.prefill_chunks += 1
             lane.pos = end
+            # every newly-FULL committed chunk-page becomes a shared,
+            # content-addressed index entry other admissions can hit
+            self.kv.publish_prefix(lane_id, req.prompt, end)
             if end < plen:
                 continue                   # prompt still streaming in
             tok = self._next_token(req, logits[0])
-            now = time.time()
+            now = time.monotonic()
             req.out_tokens.append(tok)
             req.first_token_t = now
             req.token_ts.append(now)
@@ -478,7 +531,7 @@ class ServingEngine:
         # a tuner variant may verify a narrower chunk (tuned k): drafts
         # past its window are auto-rejected — their KV was never written
         window_max = logits_np.shape[1] - 1
-        now = time.time()
+        now = time.monotonic()
         self.steps += 1
         self.spec_ticks += 1
         for i in decoding:
@@ -558,7 +611,7 @@ class ServingEngine:
         toks = sampling.sample_batch(
             logits_np[decoding], [r.sampling for r in reqs],
             [len(r.out_tokens) for r in reqs])
-        now = time.time()
+        now = time.monotonic()
         self.steps += 1
         for i, req, tok in zip(decoding, reqs, toks):
             lane = self.scheduler.lanes[i]

@@ -17,6 +17,22 @@ Page 0 of the pool is reserved as a *null page*: idle lanes decode with
 ``pos = 0`` and a zeroed page-table row, so their (discarded) KV writes
 land there and can never corrupt a live sequence.
 
+With ``prefix_cache=True`` the paged pool is additionally
+**content-addressed and refcounted**: every committed full page carries a
+rolling hash key (its token ids chained with the parent page's key), a
+global prefix index maps key -> physical page, and a new prompt whose
+leading pages hash to indexed entries is *seeded* with those pages
+instead of re-running prefill over them.  Seeded pages are shared —
+``refcount[p]`` counts the lanes referencing page ``p`` — and shared
+pages are copy-on-write: a lane that must append KV into a shared page
+first allocates a private copy.  Releasing a reference never frees an
+indexed page outright; a refcount-zero indexed page stays resident as
+*cached* capacity and is only reclaimed by the allocator under pool
+pressure (LRU by last-hit tick, or FIFO by publish order — the
+``PrefixPolicy`` tuning knobs).  Cached KV is bit-exact (the same
+tokens at the same positions through the same kernels), so outputs with
+caching on are bit-identical to caching off.
+
 The engine talks to both backends through the same methods::
 
     admit(lane, prefill_caches, prompt_len) -> bool
@@ -30,15 +46,26 @@ The engine talks to both backends through the same methods::
 """
 from __future__ import annotations
 
+import hashlib
 import math
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 NULL_PAGE = 0
+
+PREFIX_EVICTION_POLICIES = ("lru", "fifo")
+
+
+def chain_hash(parent: str, tokens: Sequence[int]) -> str:
+    """Rolling page key: the page's token ids chained with the parent
+    page's key, so a hit on page *b* implies the whole prefix through
+    *b* matches (content addressing over prefixes, not bags of pages)."""
+    data = parent + "|" + ",".join(str(int(t)) for t in tokens)
+    return hashlib.sha1(data.encode()).hexdigest()
 
 
 def _lane_set(full: jax.Array, one: jax.Array, lane: int) -> jax.Array:
@@ -71,6 +98,7 @@ class DenseKVCache:
     """Per-lane contiguous KV strips (the pre-paging layout)."""
 
     kind = "dense"
+    prefix_cache = False
 
     def __init__(self, model, n_lanes: int, max_len: int):
         self.n_lanes = n_lanes
@@ -136,18 +164,23 @@ class PageHandle:
 
 
 class PagedKVCache:
-    """Block/paged KV cache with a free-page pool and host swap space.
+    """Block/paged KV cache with a refcounted free-page pool, host swap
+    space, and an optional content-addressed prefix index.
 
     ``n_pages`` pages of ``page_size`` tokens (per layer) back every lane;
     a lane's logical block *b* lives in physical page ``table[lane, b]``.
-    Pages are lane-exclusive while allocated, so the decode step's scatter
-    can never race between lanes.
+    Without prefix caching pages are lane-exclusive while allocated; with
+    ``prefix_cache=True`` full committed pages publish into the hash
+    index and may be referenced by several lanes at once (``refcount``),
+    in which case writes go through :meth:`cow_writable` first so the
+    decode/prefill scatter still never races between lanes.
     """
 
     kind = "paged"
 
     def __init__(self, model, n_lanes: int, max_len: int, n_pages: int,
-                 page_size: int = 16):
+                 page_size: int = 16, prefix_cache: bool = False,
+                 prefix_min_match: int = 1, prefix_eviction: str = "lru"):
         if not model.supports_paged_cache:
             raise ValueError(
                 f"arch {model.cfg.name!r} does not support the paged KV "
@@ -164,8 +197,26 @@ class PagedKVCache:
         self.n_blocks = [0] * n_lanes
         # page 0 is the null page (idle-lane write sink), never allocated
         self._free = list(range(n_pages - 1, 0, -1))
+        self.refcount = np.zeros(n_pages, np.int32)   # lane refs per page
         self.swap_outs = 0
         self.swap_ins = 0
+        # -- prefix cache (content-addressed index over full pages) --------
+        self.prefix_cache = prefix_cache
+        self.prefix_min_match = max(1, int(prefix_min_match))
+        self.set_prefix_policy(eviction=prefix_eviction)
+        self._index: dict[str, int] = {}      # chain hash -> physical page
+        self._page_key: dict[int, str] = {}   # physical page -> chain hash
+        self._last_hit: dict[int, int] = {}   # page -> last match/publish
+        self._pub_order: dict[int, int] = {}  # page -> publish tick (FIFO)
+        self._chain: list[tuple[str, int]] = [("", 0)] * n_lanes
+        self._tick = 0
+        self._n_cached = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.hit_tokens = 0                   # prompt tokens never re-run
+        self.pages_saved = 0                  # seeded (not re-prefilled)
+        self.cow_copies = 0
+        self.index_evictions = 0
 
     # -- page pool ----------------------------------------------------------
     @property
@@ -173,19 +224,76 @@ class PagedKVCache:
         return len(self._free)
 
     @property
+    def cached_pages(self) -> int:
+        """Refcount-zero pages kept resident by the prefix index — the
+        reclaimable middle state between used and free.  A maintained
+        counter (updated at the refcount 0<->1 and publish/unpublish
+        transitions), not a scan: ``_alloc``/``can_admit`` read it on
+        the admission and page-boundary hot paths."""
+        return self._n_cached
+
+    @property
     def used_pages(self) -> int:
-        return (self.n_pages - 1) - len(self._free)
+        """Pages referenced by at least one lane (shared pages count
+        once)."""
+        return (self.n_pages - 1) - len(self._free) - self.cached_pages
 
     def _alloc(self, n: int) -> list[int] | None:
-        if n > len(self._free):
+        """Take ``n`` private pages (refcount 1 each): free pages first,
+        then refcount-zero index entries evicted by the reuse policy."""
+        if n > len(self._free) + self.cached_pages:
             return None
-        return [self._free.pop() for _ in range(n)]
+        pages = []
+        for _ in range(n):
+            p = self._free.pop() if self._free else self._evict_one()
+            self.refcount[p] = 1
+            pages.append(p)
+        return pages
+
+    def _evict_one(self) -> int:
+        """Reclaim one refcount-zero index entry.  Policy: ``lru`` evicts
+        the page whose index entry was hit longest ago; ``fifo`` evicts
+        the oldest-published page regardless of hits."""
+        order = self._last_hit if self.prefix_eviction == "lru" \
+            else self._pub_order
+        victim = min(
+            (p for p in self._page_key if self.refcount[p] == 0),
+            key=lambda p: order.get(p, 0))
+        self._unpublish(victim)
+        self.index_evictions += 1
+        return victim
+
+    def _unpublish(self, p: int) -> None:
+        key = self._page_key.pop(p, None)
+        if key is not None:
+            if self._index.get(key) == p:
+                del self._index[key]
+            if self.refcount[p] == 0:
+                self._n_cached -= 1
+        self._last_hit.pop(p, None)
+        self._pub_order.pop(p, None)
+
+    def _unref(self, p: int) -> None:
+        """Drop one lane reference.  A page only returns to the free list
+        at refcount zero AND outside the index — indexed pages stay
+        resident as cached capacity until the allocator evicts them."""
+        p = int(p)
+        if p == NULL_PAGE:
+            return
+        self.refcount[p] -= 1
+        if self.refcount[p] <= 0:
+            if p in self._page_key:
+                self._n_cached += 1
+            else:
+                self._free.append(p)
 
     def _free_lane(self, lane: int) -> None:
         nblk = self.n_blocks[lane]
-        self._free.extend(int(p) for p in self.table[lane, :nblk])
+        for p in self.table[lane, :nblk]:
+            self._unref(p)
         self.table[lane, :] = NULL_PAGE
         self.n_blocks[lane] = 0
+        self._chain[lane] = ("", 0)
 
     # -- engine interface ---------------------------------------------------
     def prefill_len(self, prompt_len: int) -> int:
@@ -193,7 +301,8 @@ class PagedKVCache:
         return math.ceil(prompt_len / self.page_size) * self.page_size
 
     def can_admit(self, prompt_len: int) -> bool:
-        return math.ceil(prompt_len / self.page_size) <= len(self._free)
+        return math.ceil(prompt_len / self.page_size) \
+            <= len(self._free) + self.cached_pages
 
     def admit(self, lane: int, prefill_caches: Any, prompt_len: int) -> bool:
         nblk = math.ceil(prompt_len / self.page_size)
@@ -259,7 +368,9 @@ class PagedKVCache:
         nblk = self.n_blocks[lane]
         if keep >= nblk:
             return 0
-        self._free.extend(int(p) for p in self.table[lane, keep:nblk])
+        for p in self.table[lane, keep:nblk]:
+            self._unref(p)          # never frees a page another lane or
+            #                         the prefix index still holds
         self.table[lane, keep:nblk] = NULL_PAGE
         self.n_blocks[lane] = keep
         return nblk - keep
@@ -288,6 +399,7 @@ class PagedKVCache:
         self.table[lane, :handle.n_blocks] = arr
         self.table[lane, handle.n_blocks:] = NULL_PAGE
         self.n_blocks[lane] = handle.n_blocks
+        self._chain[lane] = ("", 0)   # resumed prefill re-walks the chain
         self.swap_ins += 1
         return True
 
@@ -307,28 +419,186 @@ class PagedKVCache:
         single-sequence prefill-chunk step."""
         return jnp.asarray(self.table[lane:lane + 1])
 
+    # -- prefix cache: match / seed / publish / copy-on-write --------------
+    def set_prefix_policy(self, min_match: int | None = None,
+                          eviction: str | None = None) -> None:
+        """Reuse-policy knobs (the ``PrefixPolicy`` tuning region's PPs):
+        ``min_match`` — minimum consecutive page hits before a match is
+        used at all (tiny hits may not pay for their bookkeeping);
+        ``eviction`` — ``lru`` | ``fifo`` reclaim order for refcount-zero
+        index entries."""
+        if min_match is not None:
+            self.prefix_min_match = max(1, int(min_match))
+        if eviction is not None:
+            if eviction not in PREFIX_EVICTION_POLICIES:
+                raise ValueError(
+                    f"unknown prefix eviction policy {eviction!r} "
+                    f"(choose from {PREFIX_EVICTION_POLICIES})")
+            self.prefix_eviction = eviction
+
+    def match_prefix(self, prompt: Sequence[int]
+                     ) -> tuple[list[int], str]:
+        """Walk the prompt's full pages through the chained-hash index.
+
+        Returns (matched physical pages, chain key of the last hit) —
+        the longest indexed prefix, cut to empty when shorter than the
+        ``min_match`` granularity.  Pure lookup: no refcounts move.
+        """
+        pages: list[int] = []
+        chain = ""
+        if not self.prefix_cache:
+            return pages, chain
+        psz = self.page_size
+        for b in range(len(prompt) // psz):
+            key = chain_hash(chain, prompt[b * psz:(b + 1) * psz])
+            p = self._index.get(key)
+            if p is None:
+                break
+            pages.append(p)
+            chain = key
+        if len(pages) < self.prefix_min_match:
+            return [], ""
+        return pages, chain
+
+    def seed_prefix(self, lane: int, prompt: Sequence[int]) -> int:
+        """Admission-time reuse: point the lane's leading page-table rows
+        at the matched shared pages (refcount++) instead of re-running
+        prefill over them.
+
+        Returns the position prefill starts at — the cached token count,
+        capped at ``len(prompt) - 1`` so the final prompt position is
+        always recomputed (its logits emit the request's first token).
+        With a fully-cached page-aligned prompt that recomputed position
+        lands *inside* the last shared page; the write triggers the
+        copy-on-write path in :meth:`cow_writable`.
+        """
+        if not self.prefix_cache:
+            return 0
+        self._tick += 1
+        self.prefix_lookups += 1
+        pages, chain = self.match_prefix(prompt)
+        if not pages:
+            self._chain[lane] = ("", 0)
+            return 0
+        for p in pages:
+            if self.refcount[p] == 0:       # cached -> used transition
+                self._n_cached -= 1
+            self.refcount[p] += 1
+            self._last_hit[p] = self._tick
+        self.table[lane, :len(pages)] = np.asarray(pages, np.int32)
+        self.table[lane, len(pages):] = NULL_PAGE
+        self.n_blocks[lane] = len(pages)
+        self._chain[lane] = (chain, len(pages))
+        start = min(len(pages) * self.page_size, len(prompt) - 1)
+        self.prefix_hits += 1
+        self.hit_tokens += start
+        self.pages_saved += len(pages)
+        return start
+
+    def publish_prefix(self, lane: int, prompt: Sequence[int],
+                       upto: int) -> None:
+        """Publish the lane's newly-full committed prompt pages into the
+        index (called after each prefill chunk lands; ``upto`` = prompt
+        tokens committed so far).  Only *full* pages publish — a partial
+        page's KV is still being appended to.  A key already indexed
+        (another lane published the same prefix first) keeps its existing
+        entry; this lane's copy stays private."""
+        if not self.prefix_cache:
+            return
+        psz = self.page_size
+        chain, done = self._chain[lane]
+        n_full = min(int(upto), len(prompt)) // psz
+        for b in range(done, n_full):
+            key = chain_hash(chain, prompt[b * psz:(b + 1) * psz])
+            self._tick += 1
+            p = self._index.get(key)
+            if p is None:
+                p = int(self.table[lane, b])
+                if p != NULL_PAGE:
+                    self._index[key] = p
+                    self._page_key[p] = key
+                    self._pub_order[p] = self._tick
+            self._last_hit[p] = self._tick
+            chain = key
+        self._chain[lane] = (chain, max(done, n_full))
+
+    def cow_writable(self, lane: int, pos: int) -> bool:
+        """Copy-on-write guard: make the page holding ``pos`` privately
+        writable before a KV write lands there.
+
+        A page is *not* writable in place when another lane references it
+        (refcount > 1) or when it backs an index entry (writing would
+        silently diverge its content from its hash).  Either way the lane
+        gets a fresh private copy of the page's pool content and drops
+        its shared reference.  Returns False only when the pool cannot
+        supply the copy (page pressure — caller preempts).
+        """
+        if not self.prefix_cache:
+            return True
+        blk = int(pos) // self.page_size
+        if blk >= self.n_blocks[lane]:
+            return True                  # page not allocated yet: fresh
+        p = int(self.table[lane, blk])
+        if p == NULL_PAGE:
+            return True
+        if self.refcount[p] <= 1 and p not in self._page_key:
+            return True                  # already private
+        fresh = self._alloc(1)
+        if fresh is None:
+            return False
+        q = fresh[0]
+        self.caches = jax.tree.map(
+            lambda pool: pool.at[:, q].set(pool[:, p]), self.caches)
+        self._unref(p)
+        self.table[lane, blk] = q
+        self.cow_copies += 1
+        return True
+
     # -- accounting ---------------------------------------------------------
     def cache_tokens(self) -> int:
         """Token capacity currently held by live sequences."""
         return self.used_pages * self.page_size
 
     def stats(self) -> dict:
-        return {"kind": self.kind, "page_size": self.page_size,
-                "n_pages": self.n_pages, "used_pages": self.used_pages,
-                "free_pages": self.free_pages,
-                "cache_tokens": self.cache_tokens(),
-                "swap_outs": self.swap_outs, "swap_ins": self.swap_ins}
+        out = {"kind": self.kind, "page_size": self.page_size,
+               "n_pages": self.n_pages, "used_pages": self.used_pages,
+               "free_pages": self.free_pages,
+               "cached_pages": self.cached_pages,
+               "cache_tokens": self.cache_tokens(),
+               "swap_outs": self.swap_outs, "swap_ins": self.swap_ins}
+        if self.prefix_cache:
+            out["prefix"] = {
+                "lookups": self.prefix_lookups,
+                "hits": self.prefix_hits,
+                "hit_tokens": self.hit_tokens,
+                "pages_saved": self.pages_saved,
+                "cached_pages": self.cached_pages,
+                "cow_copies": self.cow_copies,
+                "evictions": self.index_evictions,
+                "min_match": self.prefix_min_match,
+                "eviction": self.prefix_eviction,
+            }
+        return out
 
 
 def make_kv_cache(model, cache: str, n_lanes: int, max_len: int,
-                  n_pages: int | None = None, page_size: int = 16):
+                  n_pages: int | None = None, page_size: int = 16,
+                  prefix_cache: bool = False, prefix_min_match: int = 1,
+                  prefix_eviction: str = "lru"):
     """Build a KV-cache backend by name (``dense`` | ``paged``)."""
     if cache == "dense":
+        if prefix_cache:
+            raise ValueError(
+                "prefix caching shares pages of the paged pool; "
+                "use cache='paged'")
         return DenseKVCache(model, n_lanes, max_len)
     if cache == "paged":
         if n_pages is None:
             # default pool: enough for every lane at full length (parity
             # with dense), callers shrink it to see paging pay off
             n_pages = n_lanes * math.ceil(max_len / page_size) + 1
-        return PagedKVCache(model, n_lanes, max_len, n_pages, page_size)
+        return PagedKVCache(model, n_lanes, max_len, n_pages, page_size,
+                            prefix_cache=prefix_cache,
+                            prefix_min_match=prefix_min_match,
+                            prefix_eviction=prefix_eviction)
     raise ValueError(f"unknown cache backend {cache!r}")

@@ -6,7 +6,15 @@ aggregates the serving-latency quartet every inference stack reports:
 
 * **TTFT** — time to first token (queueing + prefill);
 * **ITL** — inter-token latency during decode;
-* **tokens/s** and **requests/s** over the serving window.
+* **tokens/s** and **requests/s** over the serving window;
+* **prefix cache** — cache-hit tokens and the per-request hit rate
+  (``Request.cached_tokens`` is stamped at admission when the engine's
+  prefix cache seeds the lane from the hash index).
+
+All timestamps come from ``time.monotonic()`` (stamped by the engine and
+``Request``'s default): the quantities here are *durations*, and a
+wall-clock adjustment mid-run (NTP slew, DST) must not yield negative
+TTFT/ITL samples or a corrupted serving window.
 
 p50/p99 use :func:`percentile` — ``numpy.percentile`` with
 ``method='linear'`` passed explicitly and the results pinned by a unit
@@ -78,6 +86,18 @@ class ServingMetrics:
                        for a, b in zip(r.token_ts, r.token_ts[1:]))
         return out
 
+    def prefix_cache(self) -> dict:
+        """Cache-hit tokens + prefix-hit rate over finished requests
+        (zeros when the engine runs without a prefix cache)."""
+        cached = [r.cached_tokens for r in self.requests]
+        hit_requests = sum(1 for c in cached if c > 0)
+        return {
+            "hit_tokens": int(sum(cached)),
+            "hit_requests": hit_requests,
+            "hit_rate": (hit_requests / len(self.requests)
+                         if self.requests else 0.0),
+        }
+
     def summary(self) -> dict:
         n_tokens = sum(len(r.out_tokens) for r in self.requests)
         wall = (self._t1 - self._t0) if (self._t0 is not None
@@ -92,4 +112,5 @@ class ServingMetrics:
             "ttft_s": _pcts(self.ttfts()),
             "itl_s": _pcts(self.inter_token_latencies()),
             "preemptions": preempts,
+            "prefix_cache": self.prefix_cache(),
         }

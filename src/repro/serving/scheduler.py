@@ -45,11 +45,15 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
-    submit_t: float = field(default_factory=time.time)
+    # timestamps use the monotonic clock (as does the engine): TTFT/ITL
+    # are durations, and wall-clock adjustments (NTP slew, DST) must not
+    # produce negative or inflated latency percentiles
+    submit_t: float = field(default_factory=time.monotonic)
     first_token_t: float | None = None
     finish_t: float | None = None
     token_ts: list[float] = field(default_factory=list)
     preemptions: int = 0
+    cached_tokens: int = 0     # prompt tokens served from the prefix cache
 
 
 @dataclass

@@ -28,10 +28,23 @@ smaller k verifies a narrower chunk of the drafted tokens; greedy output
 is bit-identical for every k, so the region is free to measure and
 commit whichever trades acceptance against verify cost best per bucket.
 
-Declared through the ``repro.at`` session: committed winners (decode and
-prefill alike) persist in the session's record store, so a restarted
-server starts every bucket already committed (no first-call tuning
-jitter on the warm path).
+Prefix caching adds a fourth (:meth:`DecodeAutoTuner.add_prefix_policy`):
+a single ``PrefixPolicy`` ``dynamic select`` over the cache's *reuse
+policy* product (minimum match granularity × eviction strategy).  Like
+the spec region this tunes pure policy, not kernel tiles — the ANTAREX
+separation of adaptation policy from functional code: outputs are
+bit-identical under every candidate, so the region measures admissions
+freely and commits per its ``according`` criterion (default: the policy
+whose admissions leave the fewest uncached prompt tokens).
+
+Declared through the ``repro.at`` session: committed winners (decode,
+prefill, spec and prefix-policy alike) persist in the session's record
+store, so a restarted server starts every region already committed (no
+first-call tuning jitter on the warm path).
+
+Every bucketed region family keys off the shared
+:mod:`repro.serving.buckets` ladders — one table, no drift between the
+declaring and the routing side.
 """
 from __future__ import annotations
 
@@ -39,6 +52,7 @@ from typing import Callable
 
 from .. import at
 from ..core import ATContext
+from ..serving.buckets import LENGTH_BUCKETS
 from ..serving.engine import length_bucket
 
 DEFAULT_BLOCK_KS = (256, 512, 1024)
@@ -54,7 +68,7 @@ class DecodeAutoTuner:
 
     def __init__(self, session: "at.AutoTuner | ATContext",
                  make_decode: Callable[..., Callable],
-                 buckets=(512, 2048, 8192, 32768),
+                 buckets=LENGTH_BUCKETS,
                  block_ks=DEFAULT_BLOCK_KS,
                  page_sizes=None):
         self.session = at.AutoTuner.for_context(session)
@@ -81,12 +95,15 @@ class DecodeAutoTuner:
         self.spec_variants: list[tuple] = []
         self.spec_param_names: tuple = ()
         self.spec_regions: dict[int, object] = {}
+        self.prefix_variants: list[tuple] = []
+        self.prefix_param_names: tuple = ()
+        self.prefix_region = None
         self.session.run("dynamic",
                          [f"DecodeBucket_{b}" for b in buckets])
 
     # -- prefill region (chunked prefill) ------------------------------------
     def add_prefill(self, make_prefill: Callable[..., Callable],
-                    chunk_sizes=(64,), buckets=(512, 2048, 8192),
+                    chunk_sizes=(64,), buckets=LENGTH_BUCKETS,
                     block_qs=(64, 128), block_ks=(256, 512)) -> None:
         """Declare the prefill tuning region family.
 
@@ -116,7 +133,7 @@ class DecodeAutoTuner:
 
     # -- speculative region (draft + verify) ---------------------------------
     def add_spec(self, make_verify: Callable[..., Callable],
-                 ks=(4,), buckets=(512, 2048, 8192),
+                 ks=(4,), buckets=LENGTH_BUCKETS,
                  block_qs=(8,), block_ks=(256,),
                  according: str | None = "min (time_per_token)") -> None:
         """Declare the speculative-verify tuning region family.
@@ -155,9 +172,52 @@ class DecodeAutoTuner:
             names.append(name)
         self.session.run("dynamic", names)
 
+    # -- prefix-policy region (prefix caching) -------------------------------
+    def add_prefix_policy(self, make_policy: Callable[..., Callable],
+                          min_matches=(1, 2), evictions=("lru", "fifo"),
+                          according: str | None = "min (miss_fraction)"
+                          ) -> None:
+        """Declare the prefix-cache reuse-policy tuning region.
+
+        One ``PrefixPolicy`` ``dynamic select`` whose alternatives are
+        built by ``make_policy(min_match, eviction)`` — the (minimum
+        match granularity × eviction strategy) product.  Each variant
+        applies its knobs to the live cache and performs one admission
+        match; outputs are bit-identical under every policy, so the
+        region measures real admissions.  Raw call latency is
+        meaningless here (a policy that never matches is the fastest
+        call), so the default ``according`` commits on the variant whose
+        admission left the smallest *fraction* of its prompt uncached —
+        normalized so long- and short-prompt admissions are comparable.
+        Like every serving region that measures live traffic (a
+        SpecBucket candidate sees whatever acceptance its tick happens
+        to offer), candidates here sample different admissions — in
+        particular the index warms up across the measurement window, so
+        treat the winner as a traffic-shape heuristic, not a controlled
+        experiment.  The winner persists in the session's record store
+        and warm-loads exactly like the decode/prefill/spec winners.
+        """
+        self.prefix_param_names = ("min_match", "eviction")
+        self.prefix_variants = [(g, ev) for g in min_matches
+                                for ev in evictions]
+        sel = self.session.autotune("dynamic", "select",
+                                    name="PrefixPolicy",
+                                    according=according)
+        for var in self.prefix_variants:
+            label = ",".join(f"{k}={v}"
+                             for k, v in zip(self.prefix_param_names, var))
+            sel.alternative(name=label)(make_policy(*var))
+        self.prefix_region = sel.region
+        self.session.run("dynamic", ["PrefixPolicy"])
+
     def decode(self, kv_len: int, *args, **kwargs):
         b = length_bucket(kv_len, self.buckets)
         return self.session.execute(f"DecodeBucket_{b}", *args, **kwargs)
+
+    def prefix_policy(self, *args, **kwargs):
+        """Route one admission's prefix match through the PrefixPolicy
+        region (measure-then-commit, like every dynamic select)."""
+        return self.session.execute("PrefixPolicy", *args, **kwargs)
 
     def spec(self, kv_len: int, *args, **kwargs):
         """Route one speculative verify through its bucket's region."""
@@ -229,3 +289,15 @@ class DecodeAutoTuner:
             out[b] = None if idx is None \
                 else dict(zip(self.spec_param_names, self.spec_variants[idx]))
         return out
+
+    def committed_prefix(self) -> int | None:
+        st = self.ctx.dynamic_state.get("PrefixPolicy")
+        return None if st is None else st.committed
+
+    def committed_prefix_params(self) -> dict | None:
+        """The committed PrefixPolicy winner as a (min_match, eviction)
+        assignment (None while still measuring)."""
+        idx = self.committed_prefix()
+        return None if idx is None \
+            else dict(zip(self.prefix_param_names,
+                          self.prefix_variants[idx]))

@@ -1,0 +1,569 @@
+"""Prefix caching: hash index, refcounts, COW, eviction, bit-identity,
+the PrefixPolicy tuning region, and the monotonic-clock metrics guard.
+
+Correctness contract: the prefix cache is an *implementation detail* of
+the paged engine — greedy outputs with caching on must be bit-identical
+to caching off (which in turn matches the dense engine), across chunked
+prefill, speculative decoding, and swap-out/resume under page pressure.
+The pool must never leak: after every request finishes,
+``used + cached + free == n_pages - 1`` and every refcount is zero.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serving import (LENGTH_BUCKETS, REDUCED_BUCKETS, PagedKVCache,
+                           Request, ServingEngine, length_bucket)
+from repro.serving.kvcache import chain_hash
+
+
+@pytest.fixture(scope="module")
+def paged_model():
+    cfg = ARCHS["yi-6b"].reduced()      # plain GQA: paged-capable
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+PSZ = 8
+SHARED = [50 + i for i in range(2 * PSZ)]      # 2 exact pages
+
+
+def _shared_requests(n=3, max_new=5, aligned_tail=False):
+    """Requests sharing a 16-token (2-page) system prompt; the last one
+    repeats the prefix exactly (page-aligned full hit -> the COW path)."""
+    reqs = [Request(rid=i, prompt=SHARED + [70 + 3 * i, 71 + 3 * i,
+                                            72 + 3 * i],
+                    max_new_tokens=max_new) for i in range(n)]
+    reqs.append(Request(rid=n, prompt=list(SHARED),
+                        max_new_tokens=max_new))
+    return reqs
+
+
+def _outputs(model, params, reqs_fn, max_steps=400, **kw):
+    eng = ServingEngine(model, params, **kw)
+    for r in reqs_fn():
+        eng.submit(r)
+    done = eng.run(max_steps=max_steps)
+    return {r.rid: r.out_tokens for r in done}, eng
+
+
+def _zero_leak(kv):
+    assert kv.used_pages == 0
+    assert kv.used_pages + kv.cached_pages + kv.free_pages \
+        == kv.n_pages - 1
+    assert int(np.asarray(kv.refcount).sum()) == 0
+    assert np.all(np.asarray(kv.table) == 0)
+    # the maintained cached-page counter agrees with a full scan
+    assert kv.cached_pages == sum(1 for p in kv._page_key
+                                  if kv.refcount[p] == 0)
+
+
+# --------------------------------------------------------------------------
+# hash index: publish / match / chain
+# --------------------------------------------------------------------------
+
+
+class TestHashIndex:
+    def _kv(self, model, **kw):
+        kw.setdefault("n_pages", 17)
+        kw.setdefault("page_size", PSZ)
+        return PagedKVCache(model, n_lanes=2, max_len=64,
+                            prefix_cache=True, **kw)
+
+    def test_publish_then_match_roundtrip(self, paged_model):
+        cfg, model, params = paged_model
+        kv = self._kv(model)
+        prompt = list(range(1, 21))             # 2 full pages + 4 ragged
+        assert kv.ensure_tokens(0, 20)
+        kv.publish_prefix(0, prompt, 20)
+        pages, chain = kv.match_prefix(prompt)
+        assert len(pages) == 2                  # the ragged page never
+        #                                         publishes
+        assert pages == [int(p) for p in kv.table[0, :2]]
+        assert chain                            # chain key of the last hit
+
+    def test_chain_binds_page_to_its_prefix(self, paged_model):
+        """Page 1's key chains page 0's: identical second-page tokens
+        behind a different first page must NOT match."""
+        cfg, model, params = paged_model
+        kv = self._kv(model)
+        a = list(range(1, 17))
+        b = [99] * PSZ + a[PSZ:]                # same page 1, different 0
+        kv.ensure_tokens(0, 16)
+        kv.publish_prefix(0, a, 16)
+        assert len(kv.match_prefix(a)[0]) == 2
+        assert kv.match_prefix(b)[0] == []
+        k0 = chain_hash("", a[:PSZ])
+        assert chain_hash(k0, a[PSZ:]) != chain_hash("", a[PSZ:])
+
+    def test_min_match_granularity(self, paged_model):
+        cfg, model, params = paged_model
+        kv = self._kv(model)
+        prompt = list(range(1, 17))
+        kv.ensure_tokens(0, 16)
+        kv.publish_prefix(0, prompt, 16)
+        kv.set_prefix_policy(min_match=3)
+        assert kv.match_prefix(prompt)[0] == []     # 2 hits < 3 required
+        assert kv.seed_prefix(1, prompt) == 0
+        kv.set_prefix_policy(min_match=1)
+        assert len(kv.match_prefix(prompt)[0]) == 2
+
+    def test_short_prompt_never_indexes(self, paged_model):
+        cfg, model, params = paged_model
+        kv = self._kv(model)
+        prompt = [1, 2, 3]                      # < one page
+        kv.ensure_tokens(0, 3)
+        kv.publish_prefix(0, prompt, 3)
+        assert kv.match_prefix(prompt)[0] == []
+        assert kv._index == {}
+
+    def test_bad_eviction_policy_rejected(self, paged_model):
+        cfg, model, params = paged_model
+        kv = self._kv(model)
+        with pytest.raises(ValueError, match="eviction"):
+            kv.set_prefix_policy(eviction="random")
+
+
+# --------------------------------------------------------------------------
+# refcounts, sharing, accounting
+# --------------------------------------------------------------------------
+
+
+class TestRefcounts:
+    def test_seed_shares_and_release_keeps_cached(self, paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=2, max_len=64, n_pages=17,
+                          page_size=PSZ, prefix_cache=True)
+        prompt = list(range(1, 21))
+        kv.ensure_tokens(0, 20)                 # 3 pages (2 full + ragged)
+        kv.publish_prefix(0, prompt, 20)
+        start = kv.seed_prefix(1, prompt)
+        assert start == 16
+        shared = [int(p) for p in kv.table[1, :2]]
+        assert shared == [int(p) for p in kv.table[0, :2]]
+        assert all(kv.refcount[p] == 2 for p in shared)
+        assert kv.used_pages == 3               # shared pages count once
+        kv.release(0)
+        assert kv.used_pages == 2               # lane1 still holds them
+        assert all(kv.refcount[p] == 1 for p in shared)
+        kv.release(1)
+        assert kv.cached_pages == 2             # indexed, not freed
+        _zero_leak(kv)
+
+    def test_truncate_never_frees_shared_pages(self, paged_model):
+        """Speculative rollback on a lane holding shared prefix pages
+        only drops the lane's private tail; the shared pages survive for
+        the other lane and the index."""
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=2, max_len=64, n_pages=17,
+                          page_size=PSZ, prefix_cache=True)
+        prompt = list(range(1, 17))
+        kv.ensure_tokens(0, 16)
+        kv.publish_prefix(0, prompt, 16)
+        kv.seed_prefix(1, prompt)
+        shared = [int(p) for p in kv.table[1, :2]]
+        kv.ensure_tokens(1, 32)                 # 2 private tail pages
+        free_before = kv.free_pages
+        assert kv.truncate_to(1, 17) == 1       # drops one private page
+        assert kv.free_pages == free_before + 1
+        assert kv.truncate_to(1, 16) == 1       # page 2 (private) goes too
+        # rolling all the way down to the shared pages must not free them
+        assert kv.truncate_to(1, 8) == 1
+        assert all(kv.refcount[p] >= 1 for p in shared)
+        assert all(p not in kv._free for p in shared)
+        assert len(kv.match_prefix(prompt)[0]) == 2    # index intact
+
+    def test_lru_vs_fifo_eviction(self, paged_model):
+        """Only refcount-zero index entries are reclaimed, in policy
+        order: LRU spares the recently-hit prefix, FIFO evicts the
+        oldest-published page regardless."""
+        cfg, model, params = paged_model
+
+        def build(eviction):
+            kv = PagedKVCache(model, n_lanes=2, max_len=32, n_pages=6,
+                              page_size=4, prefix_cache=True,
+                              prefix_eviction=eviction)
+            a = list(range(1, 9))               # 2 pages
+            b = list(range(11, 19))             # 2 pages
+            kv.ensure_tokens(0, 8)
+            kv.publish_prefix(0, a, 8)
+            kv.release(0)
+            kv.ensure_tokens(0, 8)
+            kv.publish_prefix(0, b, 8)
+            kv.release(0)
+            assert kv.seed_prefix(1, a) == 7    # refresh a's last-hit
+            kv.release(1)
+            assert kv.cached_pages == 4 and kv.free_pages == 1
+            # force one eviction: 2 pages needed, 1 free
+            assert kv.ensure_tokens(0, 8)
+            assert kv.index_evictions == 1
+            return kv, a, b
+
+        kv, a, b = build("lru")
+        assert len(kv.match_prefix(a)[0]) == 2      # recently hit: spared
+        assert kv.match_prefix(b)[0] == []          # oldest hit: evicted
+        kv, a, b = build("fifo")
+        assert kv.match_prefix(a)[0] == []          # oldest publish goes
+        assert len(kv.match_prefix(b)[0]) == 2
+
+    def test_referenced_pages_never_evicted(self, paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=2, max_len=32, n_pages=4,
+                          page_size=4, prefix_cache=True)
+        a = list(range(1, 9))
+        kv.ensure_tokens(0, 8)
+        kv.publish_prefix(0, a, 8)              # lane0 holds both pages
+        assert kv.free_pages == 1 and kv.cached_pages == 0
+        assert kv._alloc(2) is None             # referenced: not evictable
+        assert len(kv.match_prefix(a)[0]) == 2
+
+
+# --------------------------------------------------------------------------
+# copy-on-write
+# --------------------------------------------------------------------------
+
+
+class TestCopyOnWrite:
+    def test_cow_copies_shared_page(self, paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=2, max_len=64, n_pages=17,
+                          page_size=PSZ, prefix_cache=True)
+        prompt = list(range(1, 17))
+        kv.ensure_tokens(0, 16)
+        kv.publish_prefix(0, prompt, 16)
+        assert kv.seed_prefix(1, prompt) == 15  # capped at plen - 1
+        old = int(kv.table[1, 1])
+        assert kv.cow_writable(1, 15)           # write lands in block 1
+        new = int(kv.table[1, 1])
+        assert new != old
+        assert kv.refcount[old] == 1            # lane0's ref only
+        assert kv.refcount[new] == 1
+        assert kv.cow_copies == 1
+        assert int(kv.table[0, 1]) == old       # lane0 untouched
+        # the copy carries the page's pool content verbatim
+        for pool in jax.tree.leaves(kv.caches):
+            np.testing.assert_array_equal(np.asarray(pool[:, new]),
+                                          np.asarray(pool[:, old]))
+        # private now: a second write needs no copy
+        assert kv.cow_writable(1, 15) and kv.cow_copies == 1
+
+    def test_cow_protects_sole_owner_indexed_page(self, paged_model):
+        """Writing into your OWN published page would silently diverge
+        its content from its hash — it must copy too, leaving the index
+        entry's page pristine (cached once the writer releases)."""
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=1, max_len=64, n_pages=17,
+                          page_size=PSZ, prefix_cache=True)
+        prompt = list(range(1, 17))
+        kv.ensure_tokens(0, 16)
+        kv.publish_prefix(0, prompt, 16)
+        old = int(kv.table[0, 1])
+        assert kv.cow_writable(0, 15)
+        assert int(kv.table[0, 1]) != old
+        assert kv.refcount[old] == 0 and old in kv._page_key
+        assert kv.cached_pages == 1             # pristine page now cached
+        assert len(kv.match_prefix(prompt)[0]) == 2
+
+    def test_private_pages_skip_cow(self, paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=1, max_len=64, n_pages=5,
+                          page_size=PSZ, prefix_cache=True)
+        kv.ensure_tokens(0, 16)                 # unpublished: private
+        tbl = [int(p) for p in kv.table[0, :2]]
+        assert kv.cow_writable(0, 15)
+        assert [int(p) for p in kv.table[0, :2]] == tbl
+        assert kv.cow_copies == 0
+
+
+# --------------------------------------------------------------------------
+# engine bit-identity + TTFT win
+# --------------------------------------------------------------------------
+
+
+class TestEngineBitIdentity:
+    @pytest.mark.parametrize("chunk", [4, 8])
+    def test_cache_on_matches_cache_off(self, paged_model, chunk):
+        """Chunked engine, shared-prefix workload incl. a page-aligned
+        full-prompt repeat (the COW admission): caching changes nothing
+        but the work done."""
+        cfg, model, params = paged_model
+        kw = dict(n_lanes=2, max_len=64, cache="paged", page_size=PSZ,
+                  prefill_chunk=chunk)
+        want, _ = _outputs(model, params, _shared_requests, **kw)
+        got, eng = _outputs(model, params, _shared_requests,
+                            prefix_cache=True, **kw)
+        assert got == want
+        st = eng.kv.stats()["prefix"]
+        assert st["hits"] >= 2 and st["hit_tokens"] > 0
+        assert st["cow_copies"] >= 1            # the full-hit repeat
+        _zero_leak(eng.kv)
+
+    def test_cache_matches_dense_engine(self, paged_model):
+        cfg, model, params = paged_model
+        want, _ = _outputs(model, params, _shared_requests,
+                           n_lanes=2, max_len=64)
+        got, _ = _outputs(model, params, _shared_requests,
+                          n_lanes=2, max_len=64, cache="paged",
+                          page_size=PSZ, prefill_chunk=8,
+                          prefix_cache=True)
+        assert got == want
+
+    def test_speculative_with_prefix_cache(self, paged_model):
+        """Speculation + prefix caching in one engine: verify writes and
+        truncate_to rollbacks never touch the shared prefix pages."""
+        cfg, model, params = paged_model
+        dmodel = model.draft_model()
+        dparams = model.slice_draft_params(params, dmodel)
+        want, _ = _outputs(model, params, _shared_requests,
+                           n_lanes=2, max_len=64)
+        got, eng = _outputs(model, params, _shared_requests,
+                            n_lanes=2, max_len=64, cache="paged",
+                            page_size=PSZ, prefill_chunk=8,
+                            prefix_cache=True, draft_model=dmodel,
+                            draft_params=dparams, spec_k=2)
+        assert got == want
+        assert eng.spec_ticks > 0
+        assert eng.kv.stats()["prefix"]["hits"] > 0
+        _zero_leak(eng.kv)
+
+    def test_repeat_prompt_skips_prefill_chunks(self, paged_model):
+        """The headline mechanism: a repeated prompt admits with its
+        prefix seeded, runs strictly fewer prefill chunks, and stamps
+        ``cached_tokens`` for the metrics layer."""
+        cfg, model, params = paged_model
+
+        def reqs():
+            return [Request(rid=i, prompt=SHARED + [80, 81, 82],
+                            max_new_tokens=4) for i in range(2)]
+
+        kw = dict(n_lanes=1, max_len=64, cache="paged", page_size=PSZ,
+                  prefill_chunk=4)
+        _, cold = _outputs(model, params, reqs, **kw)
+        got, warm = _outputs(model, params, reqs, prefix_cache=True, **kw)
+        want, _ = _outputs(model, params, reqs, **kw)
+        assert got == want
+        assert warm.prefill_chunks < cold.prefill_chunks
+        by_rid = {r.rid: r for r in warm.finished}
+        assert by_rid[0].cached_tokens == 0     # cold admission
+        assert by_rid[1].cached_tokens == 16    # both shared pages
+        m = warm.metrics.summary()["prefix_cache"]
+        assert m["hit_tokens"] == 16 and m["hit_rate"] == 0.5
+
+    def test_pressure_swap_resume_with_shared_pages(self, paged_model):
+        """Satellite: tiny pool + timeslice forces full evict/resume
+        cycles with refcounted shared pages in the mix — outputs stay
+        bit-identical, stats stay exact, zero pages leak."""
+        cfg, model, params = paged_model
+
+        def reqs():
+            return _shared_requests(4, max_new=5)
+
+        want, _ = _outputs(model, params, reqs, n_lanes=2, max_len=64)
+        got, eng = _outputs(model, params, reqs, n_lanes=2, max_len=64,
+                            cache="paged", page_size=PSZ, n_pages=13,
+                            prefill_chunk=8, timeslice=3,
+                            prefix_cache=True, max_steps=600)
+        assert got == want
+        assert eng.scheduler.preemptions > 0
+        assert eng.kv.swap_outs > 0 and eng.kv.swap_ins > 0
+        _zero_leak(eng.kv)
+        st = eng.kv.stats()
+        assert st["used_pages"] == 0
+        assert st["free_pages"] + st["cached_pages"] == eng.kv.n_pages - 1
+
+    def test_prefix_cache_requires_paged_and_chunked(self, paged_model):
+        cfg, model, params = paged_model
+        with pytest.raises(ValueError, match="paged"):
+            ServingEngine(model, params, n_lanes=1, max_len=32,
+                          prefix_cache=True)
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            ServingEngine(model, params, n_lanes=1, max_len=32,
+                          cache="paged", prefix_cache=True)
+
+
+# --------------------------------------------------------------------------
+# swap round-trip accounting (satellite)
+# --------------------------------------------------------------------------
+
+
+class TestSwapAccounting:
+    def test_swap_roundtrip_exact_stats_with_shared_pages(self,
+                                                          paged_model):
+        cfg, model, params = paged_model
+        kv = PagedKVCache(model, n_lanes=2, max_len=32, n_pages=9,
+                          page_size=PSZ, prefix_cache=True)
+        prompt = list(range(1, 17))
+        kv.ensure_tokens(0, 16)
+        kv.publish_prefix(0, prompt, 16)
+        kv.seed_prefix(1, prompt)
+        shared = [int(p) for p in kv.table[1, :2]]
+        before = jax.tree.map(
+            lambda pool: np.asarray(pool[:, shared]), kv.caches)
+        assert kv.used_pages == 2 and kv.free_pages == 6
+        h = kv.swap_out(1)                      # drops the shared refs
+        assert kv.used_pages == 2               # lane0 still holds them
+        assert all(kv.refcount[p] == 1 for p in shared)
+        assert kv.swap_in(1, h)                 # fresh private pages
+        assert kv.used_pages == 4 and kv.free_pages == 4
+        fresh = [int(p) for p in kv.table[1, :2]]
+        assert set(fresh).isdisjoint(shared)
+        after = jax.tree.map(
+            lambda pool: np.asarray(pool[:, fresh]), kv.caches)
+        jax.tree.map(np.testing.assert_array_equal, before, after)
+        kv.release(0)
+        kv.release(1)
+        assert kv.cached_pages == 2             # published pages resident
+        assert kv.free_pages == 6
+        _zero_leak(kv)
+
+
+# --------------------------------------------------------------------------
+# monotonic clock (satellite): metrics survive wall-clock adjustments
+# --------------------------------------------------------------------------
+
+
+class TestMonotonicClock:
+    def test_metrics_nonnegative_under_backwards_wall_clock(
+            self, paged_model, monkeypatch):
+        """Engine + Request timestamps use time.monotonic: a wall clock
+        stepping BACKWARDS mid-run (NTP, DST) must not produce negative
+        TTFT/ITL samples or a negative serving window."""
+        cfg, model, params = paged_model
+        wall = iter(float(t) for t in range(10 ** 6, 0, -60))
+        monkeypatch.setattr(time, "time", lambda: next(wall))
+        eng = ServingEngine(model, params, n_lanes=2, max_len=48,
+                            cache="paged", page_size=PSZ, prefill_chunk=4)
+        for r in _shared_requests(2, max_new=4):
+            eng.submit(r)
+        done = eng.run(max_steps=200)
+        assert len(done) == 3
+        s = eng.metrics.summary()
+        assert s["wall_s"] >= 0
+        assert all(t >= 0 for t in eng.metrics.ttfts())
+        assert all(t >= 0 for t in eng.metrics.inter_token_latencies())
+        for r in done:
+            assert r.first_token_t >= r.submit_t
+            assert r.finish_t >= r.first_token_t
+
+
+# --------------------------------------------------------------------------
+# PrefixPolicy tuning region (repro.at dynamic select)
+# --------------------------------------------------------------------------
+
+
+class TestPrefixPolicyRegion:
+    def _mk(self, calls):
+        def make_policy(g, ev):
+            def fn(miss=0.2):
+                calls.append((g, ev))
+                # finer granularity "matches more" in this mock
+                return {"g": g, "ev": ev, "cached": 16,
+                        "miss_fraction": miss * g}
+            return fn
+        return make_policy
+
+    def test_policy_product_space_commits(self, tmp_path):
+        from repro import at
+        from repro.tuning import DecodeAutoTuner
+        session = at.AutoTuner(str(tmp_path))
+        tuner = DecodeAutoTuner(session, lambda bk: (lambda: bk),
+                                buckets=(512,), block_ks=(256,))
+        calls: list = []
+        tuner.add_prefix_policy(self._mk(calls), min_matches=(1, 2),
+                                evictions=("lru", "fifo"))
+        assert len(tuner.prefix_region.subregions) == 4
+        assert tuner.committed_prefix_params() is None
+        for _ in range(4):                      # one call per candidate
+            tuner.prefix_policy()
+        pp = tuner.committed_prefix_params()
+        # commits on smallest miss fraction -> min_match=1 wins the mock
+        assert pp == {"min_match": 1, "eviction": "lru"}
+
+    def test_warm_restart_zero_tuning(self, tmp_path):
+        from repro import at
+        from repro.tuning import DecodeAutoTuner
+
+        s1 = at.AutoTuner(str(tmp_path))
+        t1 = DecodeAutoTuner(s1, lambda bk: (lambda: bk),
+                             buckets=(512,), block_ks=(256,))
+        t1.add_prefix_policy(self._mk([]), min_matches=(1, 2),
+                             evictions=("lru", "fifo"))
+        for _ in range(4):
+            t1.prefix_policy()
+        winner = t1.committed_prefix()
+        assert winner is not None
+
+        calls2: list = []
+        s2 = at.AutoTuner(str(tmp_path))
+        t2 = DecodeAutoTuner(s2, lambda bk: (lambda: bk),
+                             buckets=(512,), block_ks=(256,))
+        t2.add_prefix_policy(self._mk(calls2), min_matches=(1, 2),
+                             evictions=("lru", "fifo"))
+        assert t2.committed_prefix() == winner
+        assert s2.executor_calls == 0
+        assert ("dynamic", "PrefixPolicy") in s2.warm_hits
+        out = t2.prefix_policy()
+        assert (out["g"], out["ev"]) == t2.prefix_variants[winner]
+        assert calls2 == [t2.prefix_variants[winner]]   # no re-measure
+
+    def test_engine_routes_through_policy_region(self, paged_model,
+                                                 tmp_path):
+        """End-to-end: admissions route through PrefixPolicy (each call
+        measures one (min_match x eviction) candidate on a live match)
+        and greedy outputs stay bit-identical."""
+        cfg, model, params = paged_model
+        from repro.launch.serve import _make_autotuner
+        want, _ = _outputs(model, params, _shared_requests,
+                           n_lanes=2, max_len=64)
+        tuner = _make_autotuner(model, str(tmp_path), "paged", PSZ,
+                                prefill_chunk=8, prefix_cache=True)
+        assert tuner.prefix_region is not None
+        got, eng = _outputs(model, params,
+                            lambda: _shared_requests(5, max_new=4),
+                            n_lanes=2, max_len=64, cache="paged",
+                            page_size=PSZ, prefill_chunk=8,
+                            prefix_cache=True, autotuner=tuner,
+                            max_steps=600)
+        full_want, _ = _outputs(model, params,
+                                lambda: _shared_requests(5, max_new=4),
+                                n_lanes=2, max_len=64)
+        assert got == full_want
+        # 6 admissions > 4 candidates: the region has committed and the
+        # winner persisted to the record store
+        assert tuner.committed_prefix() is not None
+        assert eng.kv.stats()["prefix"]["hits"] > 0
+
+
+# --------------------------------------------------------------------------
+# bucket ladders (satellite): one table, no drift
+# --------------------------------------------------------------------------
+
+
+class TestBucketLadders:
+    def test_single_source_of_truth(self):
+        import inspect
+
+        from repro.serving import buckets as B
+        from repro.tuning.dynamic import DecodeAutoTuner
+        assert length_bucket.__defaults__[0] is B.LENGTH_BUCKETS
+        sig = inspect.signature(DecodeAutoTuner.__init__)
+        assert sig.parameters["buckets"].default is B.LENGTH_BUCKETS
+        for meth in (DecodeAutoTuner.add_prefill, DecodeAutoTuner.add_spec):
+            assert inspect.signature(meth).parameters["buckets"].default \
+                is B.LENGTH_BUCKETS
+        # the CPU-proxy ladder is a strict prefix of the full one: a
+        # winner tuned on the reduced ladder routes identically on both
+        assert B.REDUCED_BUCKETS == B.LENGTH_BUCKETS[:len(
+            B.REDUCED_BUCKETS)]
+        assert LENGTH_BUCKETS is B.LENGTH_BUCKETS
+        assert REDUCED_BUCKETS is B.REDUCED_BUCKETS
+
+    def test_reduced_ladder_routes_consistently(self):
+        for n in (4, 100, 128, 300, 2048):
+            assert length_bucket(n, REDUCED_BUCKETS) \
+                == length_bucket(n, LENGTH_BUCKETS)
