@@ -13,7 +13,11 @@ current run regresses past the thresholds:
   speculation degenerated into pure overhead);
 * a shared-prefix cell's measured ``prefix_hit_rate`` falls to zero
   while the baseline's is positive (the hash index stopped matching —
-  every admission re-prefills its shared system prompt).
+  every admission re-prefills its shared system prompt);
+* a gateway cell's ``goodput_tok_s`` (tokens/s from within-SLO requests)
+  drops by more than ``--max-tps-drop``, or its ``slo_attainment`` falls
+  to zero while the baseline's is positive (the gateway still moves
+  tokens but none inside the latency SLO).
 
 An absolute TTFT slack (``--ttft-floor``, default 50 ms) absorbs
 scheduler jitter on cells whose TTFT is tiny: a rise only fails the gate
@@ -25,7 +29,12 @@ reported but don't fail.
 Both payloads carry the run shape under ``config`` (stamped by
 ``bench_serving.py``); the gate refuses to diff two benchmarks measured
 with different workloads (exit 2) — regenerate against the matching
-baseline instead of reading false regressions.  Committed baselines:
+baseline instead of reading false regressions.  The same usage-error
+exit (2, distinct from a measured regression's 1) covers payloads whose
+*cell-key sets* disagree structurally — duplicate keys inside one
+payload, or two payloads with no keys in common (wrong baseline file,
+or a cell-schema change) — with a message naming the missing and extra
+keys instead of an unexplained traceback.  Committed baselines:
 
 * ``benchmarks/baselines/BENCH_serving_smoke.json`` — the CI smoke shape
   (``--requests 4 --max-new 5``), diffed by the ``bench-compare`` step;
@@ -59,6 +68,8 @@ def cell_key(row: dict) -> tuple:
 
 
 def _fmt_key(key: tuple) -> str:
+    if len(key) != 6:  # malformed row: show it verbatim, don't traceback
+        return repr(key)
     arch, cache, workload, chunk, spec_k, prefix_cache = key
     mode = f"/chunk={chunk}" if chunk else ""
     if spec_k is not None:
@@ -68,11 +79,39 @@ def _fmt_key(key: tuple) -> str:
     return f"{arch}:{cache}:{workload}{mode}"
 
 
-def load_payload(path: str) -> tuple[dict, dict[tuple, dict]]:
+def load_payload(path: str) -> tuple[dict, dict[tuple, dict], list[tuple]]:
+    """Parse one payload into (config, cells-by-key, duplicate-keys).
+    Two rows mapping to the same cell key would silently shadow each
+    other in the dict — the caller turns ``dupes`` into a usage error."""
     with open(path) as f:
         payload = json.load(f)
-    cells = {cell_key(row): row for row in payload.get("results", [])}
-    return payload.get("config", {}), cells
+    cells: dict[tuple, dict] = {}
+    dupes: list[tuple] = []
+    for row in payload.get("results", []):
+        key = cell_key(row)
+        if key in cells:
+            dupes.append(key)
+        cells[key] = row
+    return payload.get("config", {}), cells, dupes
+
+
+def keyset_mismatch(baseline: dict[tuple, dict], current: dict[tuple, dict]) -> str | None:
+    """A usage-error message when the two payloads' cell-key sets have
+    nothing in common (wrong baseline file or a cell-schema change) —
+    every baseline cell would read as 'missing' and every current cell
+    as 'new', which is a comparison error, not a regression.  Partial
+    overlap is left to the gate: a genuinely dropped cell must still
+    fail it."""
+    if not baseline or not current or (set(baseline) & set(current)):
+        return None
+    missing = ", ".join(_fmt_key(k) for k in sorted(baseline, key=str))
+    extra = ", ".join(_fmt_key(k) for k in sorted(current, key=str))
+    return (
+        "payloads share no cell keys — missing (baseline-only): "
+        f"[{missing}]; extra (current-only): [{extra}]; wrong "
+        "baseline file or a cell-key schema change: regenerate the "
+        "baseline with the matching bench_serving.py"
+    )
 
 
 def config_mismatch(base_cfg: dict, cur_cfg: dict) -> list[str]:
@@ -126,6 +165,22 @@ def compare(
                 f"(baseline {b_hr:.1%}) — the index stopped matching and "
                 f"every admission re-prefills its shared prompt"
             )
+        b_gp, c_gp = base.get("goodput_tok_s"), cur.get("goodput_tok_s")
+        if b_gp and c_gp is not None:
+            gp_drop = (b_gp - c_gp) / b_gp
+            if gp_drop > max_tps_drop:
+                failures.append(
+                    f"{name}: goodput dropped {gp_drop:.0%} "
+                    f"({b_gp:.1f} -> {c_gp:.1f} good tok/s; "
+                    f"limit {max_tps_drop:.0%})"
+                )
+        b_slo, c_slo = base.get("slo_attainment"), cur.get("slo_attainment")
+        if b_slo and not c_slo:
+            failures.append(
+                f"{name}: SLO attainment fell to zero "
+                f"(baseline {b_slo:.1%}) — tokens still flow but none "
+                f"inside the latency SLO"
+            )
     return failures
 
 
@@ -153,8 +208,20 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    base_cfg, baseline = load_payload(args.baseline)
-    cur_cfg, current = load_payload(args.current)
+    base_cfg, baseline, base_dupes = load_payload(args.baseline)
+    cur_cfg, current, cur_dupes = load_payload(args.current)
+    for label, path, dupes in (
+        ("baseline", args.baseline, base_dupes),
+        ("current", args.current, cur_dupes),
+    ):
+        if dupes:
+            named = ", ".join(_fmt_key(k) for k in dupes)
+            print(
+                f"[bench-compare] ERROR: {label} payload {path} has "
+                f"duplicate cell keys ({named}) — rows shadow each other, "
+                "the comparison would be against whichever came last"
+            )
+            sys.exit(2)
     mismatched = config_mismatch(base_cfg, cur_cfg)
     if mismatched:
         print(
@@ -163,6 +230,10 @@ def main() -> None:
             f"{', '.join(mismatched)}); regenerate against the matching "
             "baseline instead of reading false regressions"
         )
+        sys.exit(2)
+    disjoint = keyset_mismatch(baseline, current)
+    if disjoint:
+        print(f"[bench-compare] ERROR: {disjoint}")
         sys.exit(2)
     for key in sorted(set(current) - set(baseline), key=str):
         print(f"[bench-compare] new cell (no baseline): {_fmt_key(key)}")

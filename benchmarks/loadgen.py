@@ -1,0 +1,299 @@
+"""Closed-loop load generator for the serving gateway.
+
+Drives the HTTP/SSE gateway the way production traffic does, not the way
+a benchmark harness does:
+
+* **Poisson arrivals** — sessions arrive with exponential inter-arrival
+  times at ``--rate`` sessions/s (open-loop arrivals, so queueing delay
+  is real and the admission queue actually fills);
+* **heavy-tailed lengths** — prompt and output lengths are lognormal
+  (clipped), so a few long requests ride among many short ones;
+* **multi-turn sessions** — each session runs ``--turns`` requests
+  *closed-loop* (turn N+1 starts only after turn N streams out, plus a
+  think-time gap), and every turn's prompt is the previous turn's full
+  prompt + generated tokens + a fresh user chunk — the growing shared
+  history is exactly the workload the prefix cache serves from its hash
+  index;
+* **backpressure aware** — a 429 bounce sleeps the advertised
+  ``Retry-After`` and retries; bounces are counted, not hidden.
+
+Everything is measured **client-side** (wall-clock across the socket):
+queue-wait comes back in the server's ``done`` frame, TTFT/ITL from SSE
+frame arrival times.  The report carries the percentile quartet plus the
+two serving-quality numbers ``compare.py`` gates: **SLO attainment**
+(fraction of requests with TTFT and p95 ITL inside the SLO) and
+**goodput** (tokens/s counting only within-SLO requests).
+
+``--in-process`` starts a reduced-config engine + gateway on an
+ephemeral localhost port inside this process (real TCP, real SSE) and
+tears it down after the run — the CI smoke path and the
+``bench_serving.py`` gateway cells both use it.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/loadgen.py --in-process \
+        --requests 200 --rate 50 --turns 2 [--json out.json]
+    PYTHONPATH=src python benchmarks/loadgen.py --host H --port P ...
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def _pcts(xs) -> dict:
+    from repro.serving.metrics import percentile
+    xs = list(xs)
+    if not xs:
+        return {"p50": None, "p95": None, "p99": None, "mean": None}
+    return {"p50": percentile(xs, 50), "p95": percentile(xs, 95),
+            "p99": percentile(xs, 99),
+            "mean": float(np.asarray(xs, np.float64).mean())}
+
+
+def _lognormal_int(rng, mean: float, sigma: float, lo: int, hi: int) -> int:
+    # lognormal with the given *linear-scale* mean: mu = ln(mean) - s^2/2
+    x = rng.lognormal(np.log(mean) - sigma * sigma / 2.0, sigma)
+    return int(np.clip(round(x), lo, hi))
+
+
+class _Record:
+    __slots__ = ("tokens", "ttft_s", "itl_s", "queue_wait_s",
+                 "cached_tokens", "bounces", "ok")
+
+    def __init__(self):
+        self.tokens = 0
+        self.ttft_s = None
+        self.itl_s = []
+        self.queue_wait_s = None
+        self.cached_tokens = 0
+        self.bounces = 0
+        self.ok = False
+
+
+async def _one_turn(host: str, port: int, prompt: list[int],
+                    max_new: int, seed: int) -> tuple[_Record, list[int]]:
+    """One closed-loop request: POST, stream, retry on 429."""
+    from repro.serving.gateway import sse_generate
+    rec = _Record()
+    out: list[int] = []
+    while True:
+        t0 = time.monotonic()
+        last_t = None
+        final = None
+        async for kind, payload in sse_generate(
+                host, port, prompt, max_new_tokens=max_new,
+                sampling={"temperature": 0.0, "seed": seed}):
+            now = time.monotonic()
+            if kind == "tokens":
+                if rec.ttft_s is None:
+                    rec.ttft_s = now - t0
+                elif last_t is not None:
+                    rec.itl_s.append((now - last_t) / max(len(payload), 1))
+                last_t = now
+                out.extend(payload)
+                rec.tokens += len(payload)
+            else:
+                final = (kind, payload)
+        if final and final[0] == "http_error":
+            if final[1]["status"] == 429:
+                rec.bounces += 1
+                await asyncio.sleep(float(final[1].get("retry_after") or 1))
+                continue
+            return rec, out            # non-retryable: dropped request
+        if final and final[0] == "done":
+            rec.ok = True
+            rec.queue_wait_s = final[1].get("queue_wait_s")
+            rec.cached_tokens = final[1].get("cached_tokens") or 0
+        return rec, out
+
+
+async def run_load(host: str, port: int, *, n_requests: int = 200,
+                   rate: float = 50.0, turns: int = 1, seed: int = 0,
+                   vocab: int = 1000, prompt_mean: float = 12.0,
+                   prompt_sigma: float = 0.6, max_prompt: int = 48,
+                   out_mean: float = 8.0, out_sigma: float = 0.6,
+                   max_out: int = 24, think_s: float = 0.01,
+                   history_cap: int = 96,
+                   slo_ttft_s: float = 30.0, slo_itl_s: float = 5.0,
+                   shared_prefix: int = 0) -> dict:
+    """Drive the gateway with ``n_requests`` total turns; returns the
+    client-side report (percentiles, SLO attainment, goodput)."""
+    from repro.serving.metrics import percentile
+
+    rng = np.random.default_rng(seed)
+    n_sessions = max(1, -(-n_requests // turns))
+    # open-loop Poisson session arrivals
+    gaps = rng.exponential(1.0 / rate, size=n_sessions)
+    arrivals = np.cumsum(gaps)
+    prefix = rng.integers(0, vocab, size=shared_prefix).tolist() \
+        if shared_prefix else []
+    records: list[_Record] = []
+    t_start = time.monotonic()
+
+    async def session(i: int) -> None:
+        await asyncio.sleep(max(0.0, arrivals[i] - (time.monotonic()
+                                                    - t_start)))
+        srng = np.random.default_rng(seed * 7919 + i)
+        history = list(prefix)
+        for t in range(turns):
+            if len(records) >= n_requests:
+                return
+            p_len = _lognormal_int(srng, prompt_mean, prompt_sigma,
+                                   4, max_prompt)
+            o_len = _lognormal_int(srng, out_mean, out_sigma, 1, max_out)
+            prompt = history + srng.integers(0, vocab, size=p_len).tolist()
+            rec, out = await _one_turn(host, port, prompt, o_len,
+                                       seed + i * 101 + t)
+            records.append(rec)
+            # next turn re-hits this prefix; cap keeps prompt + budget
+            # inside the engine's max_len (keep the *front*: that is the
+            # part the prefix cache has pages for)
+            history = (prompt + out)[:history_cap]
+            if t + 1 < turns:
+                await asyncio.sleep(srng.exponential(think_s))
+
+    await asyncio.gather(*[session(i) for i in range(n_sessions)])
+    wall = time.monotonic() - t_start
+
+    done = [r for r in records if r.ok]
+    slo_ok = [r for r in done
+              if r.ttft_s is not None and r.ttft_s <= slo_ttft_s
+              and (not r.itl_s
+                   or percentile(r.itl_s, 95) <= slo_itl_s)]
+    good_tokens = sum(r.tokens for r in slo_ok)
+    all_tokens = sum(r.tokens for r in done)
+    return {
+        "requests": len(records),
+        "completed": len(done),
+        "rejected_429": sum(r.bounces for r in records),
+        "sessions": n_sessions,
+        "turns": turns,
+        "arrival_rate_per_s": rate,
+        "wall_s": wall,
+        "generated_tokens": all_tokens,
+        "tokens_per_s": all_tokens / wall if wall > 0 else 0.0,
+        "goodput_tok_s": good_tokens / wall if wall > 0 else 0.0,
+        "slo_ok": len(slo_ok),
+        "slo_attainment": len(slo_ok) / len(done) if done else 0.0,
+        "slo_ttft_s": slo_ttft_s,
+        "slo_itl_s": slo_itl_s,
+        "queue_wait_s": _pcts(r.queue_wait_s for r in done
+                              if r.queue_wait_s is not None),
+        "ttft_s": _pcts(r.ttft_s for r in done if r.ttft_s is not None),
+        "itl_s": _pcts(x for r in done for x in r.itl_s),
+        "prefix_hit_tokens": sum(r.cached_tokens for r in done),
+    }
+
+
+async def run_in_process(*, arch: str = "yi-6b", n_lanes: int = 4,
+                         max_len: int = 192, queue_limit: int = 32,
+                         policy_window: int = 2, autotune: bool = False,
+                         workdir: str = ".", seed: int = 0,
+                         prefix_cache: bool = True, **load_kw) -> dict:
+    """Start engine + gateway in-process on an ephemeral port, run the
+    load against it over real localhost TCP, drain, and merge the
+    server-side view (ticks, policy, engine queue-wait percentiles) into
+    the client-side report."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.serve import _make_autotuner
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+    from repro.serving.gateway import GatewayServer, PipelinedEngine
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    tuner = _make_autotuner(model, workdir, "paged", 16, gateway=True,
+                            prefill_chunk=16) if autotune else None
+    engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
+                           autotuner=tuner, cache="paged", page_size=16,
+                           timeslice=16, prefill_chunk=16,
+                           prefix_cache=prefix_cache)
+    pipe = PipelinedEngine(engine, queue_limit=queue_limit, tuner=tuner,
+                           policy_window=policy_window,
+                           slo_ttft_s=load_kw.get("slo_ttft_s", 30.0),
+                           slo_itl_s=load_kw.get("slo_itl_s", 5.0))
+    srv = GatewayServer(pipe)
+    await srv.start()
+    try:
+        report = await run_load("127.0.0.1", srv.port,
+                                vocab=cfg.vocab_size, seed=seed, **load_kw)
+    finally:
+        await srv.drain()
+    summary = engine.metrics.summary()
+    report["server"] = {
+        **{k: v for k, v in pipe.stats().items() if k != "draining"},
+        "queue_wait_s": summary["queue_wait_s"],
+        "preemptions": summary["preemptions"],
+        "prefix_cache": summary["prefix_cache"],
+        "committed_gateway": (tuner.committed_gateway_params()
+                              if tuner else None),
+    }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--in-process", action="store_true",
+                    help="start a reduced-config engine + gateway on an "
+                         "ephemeral port and load-test it (CI smoke)")
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson session-arrival rate (sessions/s)")
+    ap.add_argument("--turns", type=int, default=2,
+                    help="closed-loop turns per session (multi-turn "
+                         "history re-hits the prefix cache)")
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--max-out", type=int, default=24)
+    ap.add_argument("--queue-limit", type=int, default=32)
+    ap.add_argument("--autotune", action="store_true",
+                    help="in-process: tune GatewayPolicy during the run")
+    ap.add_argument("--workdir", default=".",
+                    help="in-process: AT session workdir")
+    ap.add_argument("--slo-ttft", type=float, default=30.0)
+    ap.add_argument("--slo-itl", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="write the report to this path as JSON")
+    args = ap.parse_args()
+    load_kw = dict(n_requests=args.requests, rate=args.rate,
+                   turns=args.turns, seed=args.seed,
+                   max_prompt=args.max_prompt, max_out=args.max_out,
+                   slo_ttft_s=args.slo_ttft, slo_itl_s=args.slo_itl)
+    if args.in_process:
+        report = asyncio.run(run_in_process(
+            arch=args.arch, queue_limit=args.queue_limit,
+            autotune=args.autotune, workdir=args.workdir, **load_kw))
+    else:
+        report = asyncio.run(run_load(args.host, args.port, **load_kw))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"[loadgen] {report['completed']}/{report['requests']} requests "
+          f"({report['sessions']} sessions x {report['turns']} turns), "
+          f"{report['generated_tokens']} tokens in "
+          f"{report['wall_s']:.1f}s: goodput "
+          f"{report['goodput_tok_s']:.1f} tok/s, SLO "
+          f"{report['slo_attainment']:.0%}, {report['rejected_429']} "
+          f"bounced, queue p50 "
+          f"{report['queue_wait_s']['p50'] if report['queue_wait_s']['p50'] is not None else float('nan'):.3f}s, "
+          f"ttft p50 "
+          f"{report['ttft_s']['p50'] if report['ttft_s']['p50'] is not None else float('nan'):.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,6 +53,7 @@ from ..serving import REDUCED_BUCKETS, Request, SamplingParams, ServingEngine
 
 
 def _make_autotuner(model, workdir: str, cache: str, page_size: int,
+                    gateway: bool = False,
                     prefill_chunk: int | None = None,
                     spec_k: int | None = None,
                     prefix_cache: bool = False):
@@ -177,6 +178,11 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                 return variant
 
             tuner.add_prefix_policy(make_policy)
+        if gateway:
+            # the gateway's concurrency product (pipeline depth x
+            # admission batch) — measured over traffic windows and
+            # committed on time-per-good-token (inverse goodput)
+            tuner.add_gateway(max_inflights=(1, 2), admit_batches=(2, 8))
         return tuner
 
     def make_decode(block_k):
@@ -187,9 +193,77 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
             return decode_bk(p, caches, token, pos)
         return variant
 
-    return DecodeAutoTuner(session, make_decode,
-                           buckets=REDUCED_BUCKETS,
-                           block_ks=(256, 512))
+    tuner = DecodeAutoTuner(session, make_decode,
+                            buckets=REDUCED_BUCKETS,
+                            block_ks=(256, 512))
+    if gateway:
+        tuner.add_gateway(max_inflights=(1, 2), admit_batches=(2, 8))
+    return tuner
+
+
+def _serve_gateway(engine, tuner, prompts, *, max_new: int, port: int,
+                   queue_limit: int, policy_window: int,
+                   slo_ttft_s: float, slo_itl_s: float,
+                   temperature: float, top_k: int, top_p: float,
+                   seed: int):
+    """Serve the workload through the HTTP/SSE gateway: every request is
+    a real localhost TCP client streaming SSE frames, the engine ticks in
+    the pipelined asyncio loop, and the report carries goodput / SLO
+    attainment next to the engine's own metrics."""
+    import asyncio
+
+    from ..serving.gateway import GatewayServer, PipelinedEngine, sse_generate
+    from ..serving.gateway.pipeline import goodput_stats
+
+    sampling = None
+    if temperature > 0.0 or top_k or top_p < 1.0:
+        sampling = {"temperature": temperature, "top_k": top_k,
+                    "top_p": top_p}
+
+    async def _run():
+        pipe = PipelinedEngine(engine, queue_limit=queue_limit, tuner=tuner,
+                               policy_window=policy_window,
+                               slo_ttft_s=slo_ttft_s, slo_itl_s=slo_itl_s)
+        srv = GatewayServer(pipe, port=port)
+        await srv.start()
+        t0 = time.monotonic()
+
+        async def one(i, prompt):
+            n_tokens, bounced = 0, 0
+            while True:        # honor Retry-After on a 429 bounce
+                final = None
+                async for kind, payload in sse_generate(
+                        "127.0.0.1", srv.port, prompt,
+                        max_new_tokens=max_new,
+                        sampling=dict(sampling, seed=seed + i)
+                        if sampling else None):
+                    if kind == "tokens":
+                        n_tokens += len(payload)
+                    else:
+                        final = (kind, payload)
+                if final and final[0] == "http_error" \
+                        and final[1]["status"] == 429:
+                    bounced += 1
+                    await asyncio.sleep(
+                        float(final[1].get("retry_after") or 1))
+                    continue
+                return n_tokens, bounced, final
+
+        results = await asyncio.gather(
+            *[one(i, p) for i, p in enumerate(prompts)])
+        wall = time.monotonic() - t0
+        await srv.drain()
+        return pipe, results, wall
+
+    pipe, results, wall = asyncio.run(_run())
+    report = {
+        "requests": len(prompts),
+        "wall_s": wall,
+        "client_retries_429": sum(r[1] for r in results),
+        **{k: v for k, v in pipe.stats().items() if k != "draining"},
+        **goodput_stats(engine.finished, wall, slo_ttft_s, slo_itl_s),
+    }
+    return engine.finished, report
 
 
 def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
@@ -200,7 +274,9 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
           prefill_chunk: int | None = None, draft: bool = False,
           spec_k: int = 4, temperature: float = 0.0, top_k: int = 0,
           top_p: float = 1.0, prefix_cache: bool = False,
-          shared_prefix: int = 0) -> dict:
+          shared_prefix: int = 0, gateway: bool = False, port: int = 0,
+          queue_limit: int = 64, policy_window: int = 2,
+          slo_ttft_s: float = 30.0, slo_itl_s: float = 5.0) -> dict:
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -212,6 +288,7 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         draft_model = model.draft_model()
         draft_params = model.slice_draft_params(params, draft_model)
     tuner = _make_autotuner(model, workdir, cache, page_size,
+                            gateway=gateway,
                             prefill_chunk=prefill_chunk,
                             spec_k=spec_k if draft else None,
                             prefix_cache=prefix_cache) \
@@ -230,16 +307,25 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
     prefix = rng.integers(0, cfg.vocab_size,
                           size=shared_prefix).tolist() if shared_prefix \
         else []
-    for rid in range(n_requests):
-        prompt = prefix + rng.integers(
-            0, cfg.vocab_size, size=rng.integers(4, prompt_len)).tolist()
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=max_new,
-                              sampling=SamplingParams(
-                                  temperature=temperature, top_k=top_k,
-                                  top_p=top_p, seed=seed + rid)))
-    finished = engine.run(
-        max_steps=n_requests * (max_new + 4 + shared_prefix))
+    prompts = [prefix + rng.integers(
+        0, cfg.vocab_size, size=rng.integers(4, prompt_len)).tolist()
+        for _ in range(n_requests)]
+    gateway_report = None
+    if gateway:
+        finished, gateway_report = _serve_gateway(
+            engine, tuner, prompts, max_new=max_new, port=port,
+            queue_limit=queue_limit, policy_window=policy_window,
+            slo_ttft_s=slo_ttft_s, slo_itl_s=slo_itl_s,
+            temperature=temperature, top_k=top_k, top_p=top_p, seed=seed)
+    else:
+        for rid in range(n_requests):
+            engine.submit(Request(rid=rid, prompt=prompts[rid],
+                                  max_new_tokens=max_new,
+                                  sampling=SamplingParams(
+                                      temperature=temperature, top_k=top_k,
+                                      top_p=top_p, seed=seed + rid)))
+        finished = engine.run(
+            max_steps=n_requests * (max_new + 4 + shared_prefix))
     summary = engine.metrics.summary()
     prefix_stats = None
     if prefix_cache:
@@ -254,6 +340,8 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         "decode_steps": engine.steps,
         "generated_tokens": summary["generated_tokens"],
         "tokens_per_s": summary["tokens_per_s"],
+        "p50_queue_wait_s": summary["queue_wait_s"]["p50"],
+        "p99_queue_wait_s": summary["queue_wait_s"]["p99"],
         "mean_ttft_s": summary["ttft_s"]["mean"],
         "p50_ttft_s": summary["ttft_s"]["p50"],
         "p99_ttft_s": summary["ttft_s"]["p99"],
@@ -275,6 +363,10 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         "committed_prefix": (tuner.committed_prefix_params()
                              if tuner and tuner.prefix_region is not None
                              else None),
+        "gateway": gateway_report,
+        "committed_gateway": (tuner.committed_gateway_params()
+                              if tuner and tuner.gateway_region is not None
+                              else None),
     }
 
 
@@ -315,6 +407,21 @@ def main() -> None:
                     help="top-k sampling filter (0 disables)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 disables)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve through the async HTTP/SSE gateway "
+                         "(pipelined ticks, real localhost TCP clients)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="gateway: listen port (0 = ephemeral)")
+    ap.add_argument("--queue-limit", type=int, default=64,
+                    help="gateway: admission-queue bound (429 beyond)")
+    ap.add_argument("--policy-window", type=int, default=2,
+                    help="gateway: finished requests per GatewayPolicy "
+                         "measurement window")
+    ap.add_argument("--slo-ttft", type=float, default=30.0,
+                    help="gateway: TTFT SLO in seconds (goodput counts "
+                         "only requests inside it)")
+    ap.add_argument("--slo-itl", type=float, default=5.0,
+                    help="gateway: p95 inter-token-latency SLO in seconds")
     ap.add_argument("--autotune", action="store_true",
                     help="run-time AT over decode buckets (repro.at)")
     ap.add_argument("--workdir", default=".",
@@ -329,7 +436,10 @@ def main() -> None:
                 draft=args.draft, spec_k=args.spec_k,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, prefix_cache=args.prefix_cache,
-                shared_prefix=args.shared_prefix)
+                shared_prefix=args.shared_prefix, gateway=args.gateway,
+                port=args.port, queue_limit=args.queue_limit,
+                policy_window=args.policy_window,
+                slo_ttft_s=args.slo_ttft, slo_itl_s=args.slo_itl)
     def fmt(x, spec):
         return format(x, spec) if x is not None else "n/a"
 
@@ -345,9 +455,16 @@ def main() -> None:
                       f"{out['requests']} ({p['hit_rate']:.0%}, "
                       f"{p['hit_tokens']} tok, "
                       f"{p['pages_saved']} pages saved)")
+    if out["gateway"] is not None:
+        g = out["gateway"]
+        spec_note += (f", gateway {g['goodput_tok_s']:.1f} good tok/s "
+                      f"(SLO {g['slo_attainment']:.0%}, "
+                      f"{g['overlapped_ticks']}/{g['ticks']} ticks "
+                      f"overlapped, {g['rejected_429']} bounced)")
     print(f"[serve] {out['finished']}/{out['requests']} requests, "
           f"{out['generated_tokens']} tokens in {out['wall_s']:.1f}s "
           f"({out['tokens_per_s']:.1f} tok/s, "
+          f"queue p50 {fmt(out['p50_queue_wait_s'], '.3f')}s, "
           f"ttft p50 {fmt(out['p50_ttft_s'], '.3f')}s "
           f"p99 {fmt(out['p99_ttft_s'], '.3f')}s, "
           f"itl p50 {fmt(out['p50_itl_s'], '.4f')}s, "

@@ -13,16 +13,20 @@ Layers (see ``docs/SERVING.md``):
   speculative accept/reject rule;
 * :mod:`.metrics` — TTFT / inter-token latency / throughput aggregation;
 * :mod:`.engine` — the orchestrator tying them to the model's decode
-  step (plain, chunked-prefill, and speculative).
+  step (plain, chunked-prefill, and speculative), with each tick split
+  into ``schedule`` / ``dispatch`` / ``emit`` phases;
+* :mod:`.gateway` — the async HTTP/SSE front-end: pipelined tick loop
+  (host scheduling overlaps device compute), bounded admission with
+  backpressure, per-request cancellation, graceful drain.
 """
 from .buckets import LENGTH_BUCKETS, REDUCED_BUCKETS
-from .engine import LaneState, Request, ServingEngine, length_bucket
+from .engine import LaneState, Request, ServingEngine, TickWork, length_bucket
 from .kvcache import DenseKVCache, PagedKVCache, make_kv_cache
 from .metrics import ServingMetrics
 from .sampling import SamplingParams
 from .scheduler import Scheduler
 
-__all__ = ["ServingEngine", "Request", "LaneState", "length_bucket",
-           "LENGTH_BUCKETS", "REDUCED_BUCKETS",
+__all__ = ["ServingEngine", "Request", "LaneState", "TickWork",
+           "length_bucket", "LENGTH_BUCKETS", "REDUCED_BUCKETS",
            "DenseKVCache", "PagedKVCache", "make_kv_cache", "Scheduler",
            "ServingMetrics", "SamplingParams"]

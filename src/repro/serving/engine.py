@@ -48,7 +48,8 @@ output is bit-identical to plain greedy decode.
 from __future__ import annotations
 
 import time
-from typing import Callable
+from dataclasses import dataclass
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +61,8 @@ from .kvcache import DenseKVCache, PagedKVCache, make_kv_cache
 from .metrics import ServingMetrics
 from .scheduler import LaneState, Request, Scheduler
 
-__all__ = ["ServingEngine", "Request", "LaneState", "length_bucket"]
+__all__ = ["ServingEngine", "Request", "LaneState", "TickWork",
+           "length_bucket"]
 
 
 def length_bucket(n: int, buckets=LENGTH_BUCKETS) -> int:
@@ -68,6 +70,28 @@ def length_bucket(n: int, buckets=LENGTH_BUCKETS) -> int:
         if n <= b:
             return b
     return buckets[-1]
+
+
+@dataclass
+class TickWork:
+    """One dispatched-but-unmaterialised decode tick.
+
+    ``dispatch()`` returns the tick's device work as jax arrays (async
+    futures under jax's dispatch model) plus the host-side batch context
+    the emission needs.  Nothing has blocked yet: :meth:`block` (or the
+    ``np.asarray`` inside :meth:`ServingEngine.emit`) is the first point
+    the host waits on the device — which is what lets a pipelined caller
+    overlap other host work (network I/O, queue drain) with the device
+    compute of the current tick.
+    """
+
+    logits: Any                # (n_lanes, 1, V) jax array, un-materialised
+    decoding: list[int]        # lane ids in this tick's decode batch
+    reqs: list[Request]        # the lanes' requests, same order
+
+    def block(self) -> None:
+        """Wait for the tick's device compute (callable off-thread)."""
+        jax.block_until_ready(self.logits)
 
 
 class ServingEngine:
@@ -148,6 +172,7 @@ class ServingEngine:
         self.autotuner = autotuner
         self.active: dict[int, Request] = {}
         self.finished: list[Request] = []
+        self.cancelled: list[Request] = []
         self.steps = 0
         self.prefill_chunks = 0          # chunk-steps executed (chunked)
         self.spec_ticks = 0              # speculative ticks executed
@@ -179,6 +204,36 @@ class ServingEngine:
         self.active.pop(req.rid, None)
         self.kv.release(lane_id)
         self.scheduler.vacate(lane_id)
+
+    def cancel_request(self, rid: int) -> bool:
+        """Abort a request wherever it lives — queued, preempted, or on a
+        lane — releasing its lane and KV pages (refcounts on shared prefix
+        pages drop cleanly; the pool's three-state accounting balances).
+
+        The client-disconnect path of the gateway.  Cancelled requests do
+        NOT feed the latency metrics (a half-served stream has no honest
+        TTFT/ITL) and are tracked in :attr:`cancelled` instead of
+        :attr:`finished`.  Must be called at a tick boundary, never
+        between :meth:`dispatch` and :meth:`emit` — the pending tick's
+        batch context still references the lane.  Returns False when
+        ``rid`` is unknown (already finished or never submitted).
+        """
+        req = self.active.pop(rid, None)
+        if req is not None:
+            lane_id = next(i for i, l in enumerate(self.scheduler.lanes)
+                           if l.rid == rid)
+            self.kv.release(lane_id)
+            self.scheduler.vacate(lane_id)
+            self._reset_draft(lane_id)
+        else:
+            req = self.scheduler.remove_queued(rid)
+            if req is None:
+                return False
+        req.done = True
+        req.cancelled = True
+        req.finish_t = time.monotonic()
+        self.cancelled.append(req)
+        return True
 
     def _is_eos(self, tok: int) -> bool:
         """Explicit EOS guard: ``eos_id=0`` is a valid stop token and
@@ -253,6 +308,8 @@ class ServingEngine:
                 # shared pages — prefill then starts at the first uncached
                 # token (TTFT shrinks by exactly the skipped chunks)
                 cached = self._seed_prefix(lane_id, req)
+                if req.admit_t is None:
+                    req.admit_t = time.monotonic()   # queue wait ends here
                 self.scheduler.occupy(lane_id, req, cached,
                                       req.max_new_tokens, phase="prefill")
                 self._reset_draft(lane_id)
@@ -262,6 +319,8 @@ class ServingEngine:
                     and not self.kv.can_admit(len(req.prompt)):
                 self.scheduler.push_back(kind, req)
                 return                     # page pressure; stay queued
+            if req.admit_t is None:
+                req.admit_t = time.monotonic()   # queue wait ends here
             plen = self.kv.prefill_len(len(req.prompt))
             logits, cache1 = self._prefill(
                 self.params, jnp.asarray([req.prompt], jnp.int32),
@@ -572,20 +631,38 @@ class ServingEngine:
                             if self.drafted_tokens else 0.0),
         }
 
-    # -- one scheduler tick: prefill chunks + one decode step ---------------
-    def step(self) -> None:
+    # -- one scheduler tick: schedule -> dispatch -> emit --------------------
+    # step() is the synchronous composition; the gateway's pipelined loop
+    # calls the three phases itself so the host can do other work (drain
+    # arrivals, flush token streams over the network) between dispatch and
+    # emit, while the device computes the tick.
+    def schedule(self) -> None:
+        """Host-side scheduling half of a tick: time-slice victim, queue
+        admissions, prefill chunks (their device work dispatches async;
+        only a final chunk's token emission materialises)."""
         victim = self.scheduler.pick_victim()
         if victim is not None:
             self._preempt_lane(victim)
         self._admit()
         self._prefill_tick()
+
+    def dispatch(self) -> TickWork | None:
+        """Dispatch the tick's batched decode step without waiting on it.
+
+        ``kv.caches`` is advanced to the (asynchronously computing) output
+        caches immediately, so any later work composes on the right value;
+        the logits stay un-materialised inside the returned
+        :class:`TickWork` until :meth:`emit`.  Speculative ticks run
+        internally (their accept/reject rule is host-side by nature) and
+        return None, as does a tick with no decoding lanes.
+        """
         if self.spec_k is not None:
             self._spec_tick()
-            return
+            return None
         self._ensure_capacity()
         decoding = self.scheduler.decode_lanes()
         if not decoding:
-            return
+            return None
         token = np.zeros((self.n_lanes, 1), np.int32)
         pos = np.zeros((self.n_lanes,), np.int32)
         for i in decoding:
@@ -606,14 +683,22 @@ class ServingEngine:
         else:
             logits, new_caches = self._decode(*args)
         self.kv.caches = new_caches
-        logits_np = np.asarray(logits)
         reqs = [self.active[self.scheduler.lanes[i].rid] for i in decoding]
+        return TickWork(logits=logits, decoding=decoding, reqs=reqs)
+
+    def emit(self, work: TickWork | None) -> None:
+        """Materialise a dispatched tick's logits (the first host-device
+        sync of the tick), sample each lane's token, and run the finish
+        bookkeeping.  No-op for ``None`` (spec/idle ticks)."""
+        if work is None:
+            return
+        logits_np = np.asarray(work.logits)
         toks = sampling.sample_batch(
-            logits_np[decoding], [r.sampling for r in reqs],
-            [len(r.out_tokens) for r in reqs])
+            logits_np[work.decoding], [r.sampling for r in work.reqs],
+            [len(r.out_tokens) for r in work.reqs])
         now = time.monotonic()
         self.steps += 1
-        for i, req, tok in zip(decoding, reqs, toks):
+        for i, req, tok in zip(work.decoding, work.reqs, toks):
             lane = self.scheduler.lanes[i]
             req.out_tokens.append(tok)
             req.token_ts.append(now)
@@ -624,6 +709,10 @@ class ServingEngine:
             if lane.remaining <= 0 or self._is_eos(tok) \
                     or lane.pos >= self.max_len - 1:
                 self._finish(i, req, now)
+
+    def step(self) -> None:
+        self.schedule()
+        self.emit(self.dispatch())
 
     def run(self, max_steps: int = 1000) -> list[Request]:
         while (self.scheduler.has_queued or self.active) \

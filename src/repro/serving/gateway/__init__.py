@@ -1,0 +1,33 @@
+"""Async serving gateway: pipelined tick loop + HTTP/SSE front-end.
+
+The gateway is the subsystem that turns the single-process
+:class:`~repro.serving.engine.ServingEngine` into something a load
+generator (or a browser) can actually talk to:
+
+* :mod:`.pipeline` — :class:`PipelinedEngine`, the asyncio tick driver.
+  It splits each engine tick into the engine's ``schedule`` /
+  ``dispatch`` / ``emit`` phases and defers the host-device sync
+  (``jax.block_until_ready``) to token emission, so network I/O and the
+  next tick's admission work overlap the device compute of the current
+  tick (double-buffered ticks).  Greedy outputs are bit-identical to the
+  synchronous ``Engine.run()`` loop.
+* :mod:`.server` — :class:`GatewayServer`, a dependency-free asyncio
+  HTTP/1.1 server with per-token SSE streaming, a bounded admission
+  queue with backpressure (429 + ``Retry-After`` when full), per-request
+  cancellation on client disconnect (pages and prefix refcounts release
+  cleanly), and graceful drain on shutdown.
+* :mod:`.client` — minimal asyncio HTTP/SSE client helpers shared by
+  the load generator (``benchmarks/loadgen.py``) and the tests.
+
+The gateway's concurrency knobs — pipeline depth x admission batch —
+are a ``GatewayPolicy`` dynamic-select AT region
+(:meth:`repro.tuning.dynamic.DecodeAutoTuner.add_gateway`) committing on
+goodput, persisted and warm-loaded like the decode/prefill/spec/prefix
+winners.  See ``docs/SERVING.md`` (gateway section).
+"""
+from .client import get_json, post_json, sse_generate
+from .pipeline import GatewayPolicyKnobs, PipelinedEngine, TokenStream
+from .server import GatewayServer
+
+__all__ = ["PipelinedEngine", "TokenStream", "GatewayPolicyKnobs",
+           "GatewayServer", "sse_generate", "post_json", "get_json"]

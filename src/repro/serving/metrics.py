@@ -4,6 +4,10 @@ Collects per-request timing (submit / first token / per-token / finish)
 from finished :class:`~repro.serving.scheduler.Request` objects and
 aggregates the serving-latency quartet every inference stack reports:
 
+* **queue wait** — submit to first lane occupancy (pure queueing delay;
+  ``Request.admit_t`` is stamped by the engine at first admission, and
+  the gateway stamps ``submit_t`` at HTTP arrival so network-side
+  queueing is visible too);
 * **TTFT** — time to first token (queueing + prefill);
 * **ITL** — inter-token latency during decode;
 * **tokens/s** and **requests/s** over the serving window;
@@ -79,6 +83,15 @@ class ServingMetrics:
         return [r.first_token_t - r.submit_t for r in self.requests
                 if r.first_token_t is not None]
 
+    def queue_waits(self) -> list[float]:
+        """Submit-to-first-lane-occupancy per request.  ``submit_t`` is
+        stamped where the request *arrives* (the gateway's HTTP handler,
+        or ``Request`` construction in direct-engine use) and ``admit_t``
+        where the engine first gives it a lane — the gap is pure queueing
+        delay, the thing TTFT alone hides under load."""
+        return [r.admit_t - r.submit_t for r in self.requests
+                if r.admit_t is not None]
+
     def inter_token_latencies(self) -> list[float]:
         out: list[float] = []
         for r in self.requests:
@@ -109,6 +122,7 @@ class ServingMetrics:
             "wall_s": wall,
             "tokens_per_s": n_tokens / wall if wall > 0 else 0.0,
             "requests_per_s": len(self.requests) / wall if wall > 0 else 0.0,
+            "queue_wait_s": _pcts(self.queue_waits()),
             "ttft_s": _pcts(self.ttfts()),
             "itl_s": _pcts(self.inter_token_latencies()),
             "preemptions": preempts,

@@ -49,11 +49,13 @@ class Request:
     # are durations, and wall-clock adjustments (NTP slew, DST) must not
     # produce negative or inflated latency percentiles
     submit_t: float = field(default_factory=time.monotonic)
+    admit_t: float | None = None   # first lane occupancy (queue wait ends)
     first_token_t: float | None = None
     finish_t: float | None = None
     token_ts: list[float] = field(default_factory=list)
     preemptions: int = 0
     cached_tokens: int = 0     # prompt tokens served from the prefix cache
+    cancelled: bool = False    # aborted (client disconnect), not finished
 
 
 @dataclass
@@ -130,6 +132,18 @@ class Scheduler:
     def push_back(self, kind: str, item: Any) -> None:
         """Return an un-admittable item to the head of the queue."""
         self.ready.appendleft(item)
+
+    def remove_queued(self, rid: int) -> Request | None:
+        """Pull a queued request (new or preempted) out of the ready deque
+        — the cancellation path for work that never reached, or was bumped
+        from, a lane.  Returns the request, or None if ``rid`` is not
+        queued."""
+        for item in self.ready:
+            req = item.req if isinstance(item, ResumeEntry) else item
+            if req.rid == rid:
+                self.ready.remove(item)
+                return req
+        return None
 
     def occupy(self, lane_id: int, req: Request, pos: int,
                remaining: int, phase: str = "decode") -> None:

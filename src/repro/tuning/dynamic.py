@@ -37,10 +37,17 @@ bit-identical under every candidate, so the region measures admissions
 freely and commits per its ``according`` criterion (default: the policy
 whose admissions leave the fewest uncached prompt tokens).
 
+The serving gateway adds a fifth (:meth:`DecodeAutoTuner.add_gateway`):
+a single ``GatewayPolicy`` ``dynamic select`` over the gateway's
+concurrency product (pipeline depth × admission batch).  Candidates are
+measured over *windows* of live traffic rather than single calls, and
+the criterion is ``min (time_per_good_token)`` — the inverse of goodput,
+tokens from within-SLO requests per wall second.
+
 Declared through the ``repro.at`` session: committed winners (decode,
-prefill, spec and prefix-policy alike) persist in the session's record
-store, so a restarted server starts every region already committed (no
-first-call tuning jitter on the warm path).
+prefill, spec, prefix-policy and gateway-policy alike) persist in the
+session's record store, so a restarted server starts every region
+already committed (no first-call tuning jitter on the warm path).
 
 Every bucketed region family keys off the shared
 :mod:`repro.serving.buckets` ladders — one table, no drift between the
@@ -98,6 +105,9 @@ class DecodeAutoTuner:
         self.prefix_variants: list[tuple] = []
         self.prefix_param_names: tuple = ()
         self.prefix_region = None
+        self.gateway_variants: list[tuple] = []
+        self.gateway_param_names: tuple = ()
+        self.gateway_region = None
         self.session.run("dynamic",
                          [f"DecodeBucket_{b}" for b in buckets])
 
@@ -209,6 +219,84 @@ class DecodeAutoTuner:
             sel.alternative(name=label)(make_policy(*var))
         self.prefix_region = sel.region
         self.session.run("dynamic", ["PrefixPolicy"])
+
+    # -- gateway-policy region (pipelined serving front-end) -----------------
+    def add_gateway(self, max_inflights=(1, 2), admit_batches=(1, 4, 16),
+                    according: str | None = "min (time_per_good_token)"
+                    ) -> None:
+        """Declare the gateway concurrency-policy tuning region.
+
+        One ``GatewayPolicy`` ``dynamic select`` over the (pipeline depth
+        × admission batch) product: ``max_inflight`` is how many ticks
+        may be in flight on the device before the host blocks (1 = the
+        synchronous loop, 2 = double-buffered), ``admit_batch`` how many
+        queued arrivals the gateway moves into the scheduler per tick.
+        Pure policy again — greedy outputs are bit-identical under every
+        candidate — but unlike the kernel regions a candidate cannot be
+        measured by one call: the gateway runs a *window* of traffic
+        (``policy_window`` finished requests) under each candidate's
+        knobs and reports the window's aggregate through
+        :meth:`gateway_policy`.  Raw latency is the wrong criterion (an
+        admission policy that starves the queue makes individual calls
+        fast), so the default ``according`` commits on
+        ``time_per_good_token`` — wall seconds per token generated by
+        requests that met their SLO; minimising it is maximising
+        goodput.  The winner persists in the record store and
+        warm-loads like every other region: a restarted gateway applies
+        the committed knobs immediately and runs zero measurement
+        windows.
+        """
+        self.gateway_param_names = ("max_inflight", "admit_batch")
+        self.gateway_variants = [(mi, ab) for mi in max_inflights
+                                 for ab in admit_batches]
+        sel = self.session.autotune("dynamic", "select",
+                                    name="GatewayPolicy",
+                                    according=according)
+        for var in self.gateway_variants:
+            label = ",".join(f"{k}={v}"
+                             for k, v in zip(self.gateway_param_names, var))
+            mi, ab = var
+
+            def report(stats: dict, _mi=mi, _ab=ab) -> dict:
+                # the window already ran under these knobs; attribute its
+                # aggregate to this candidate as the region's env
+                return {**stats, "max_inflight": _mi, "admit_batch": _ab}
+
+            sel.alternative(name=label)(report)
+        self.gateway_region = sel.region
+        self.session.run("dynamic", ["GatewayPolicy"])
+
+    def gateway_policy(self, stats: dict, **kwargs):
+        """Report one measurement window's aggregate stats through the
+        GatewayPolicy region (measure-then-commit; the committed path is
+        a no-op passthrough)."""
+        return self.session.execute("GatewayPolicy", stats, **kwargs)
+
+    def gateway_candidate(self) -> int:
+        """The candidate index whose knobs the gateway should apply for
+        the *next* window: the committed winner if any, else the next
+        untried index — the same iteration order ``execute`` uses, so
+        window stats are attributed to the knobs that produced them."""
+        st = self.ctx.dynamic_state.get("GatewayPolicy")
+        if st is None:
+            return 0
+        if st.committed is not None:
+            return st.committed
+        nxt = next((i for i in range(len(self.gateway_variants))
+                    if i not in st.tried), None)
+        return 0 if nxt is None else nxt
+
+    def committed_gateway(self) -> int | None:
+        st = self.ctx.dynamic_state.get("GatewayPolicy")
+        return None if st is None else st.committed
+
+    def committed_gateway_params(self) -> dict | None:
+        """The committed GatewayPolicy winner as a (max_inflight,
+        admit_batch) assignment (None while still measuring)."""
+        idx = self.committed_gateway()
+        return None if idx is None \
+            else dict(zip(self.gateway_param_names,
+                          self.gateway_variants[idx]))
 
     def decode(self, kv_len: int, *args, **kwargs):
         b = length_bucket(kv_len, self.buckets)

@@ -1,0 +1,378 @@
+"""Gateway tests: SSE bit-identity, backpressure, disconnect leak
+accounting, queue-wait metrics, GatewayPolicy commit + warm restart, and
+the compare.py cell-key usage errors.
+
+The HTTP tests run a real ``GatewayServer`` on an ephemeral localhost
+port and talk to it with the stdlib SSE client — actual TCP, actual
+HTTP/1.1 framing, no mocked transport.
+"""
+from __future__ import annotations
+
+import asyncio
+import importlib.util
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+from repro.serving.gateway import (GatewayServer, PipelinedEngine,
+                                   get_json, sse_generate)
+from repro.serving.gateway.pipeline import QueueFull
+
+ARCH = "yi-6b"
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_arch(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine(model_and_params, **kw):
+    cfg, model, params = model_and_params
+    kw.setdefault("n_lanes", 2)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("cache", "paged")
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 8)
+    return ServingEngine(model, params, **kw)
+
+
+def make_prompts(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(4, 12))).tolist()
+            for _ in range(n)]
+
+
+# -- streaming bit-identity -------------------------------------------------
+
+def test_sse_stream_bit_identical_to_sync_engine(model_and_params):
+    """Tokens streamed over SSE match ``Engine.run()`` exactly — same
+    content, same order — under preemption, chunked prefill and the
+    prefix cache, with pipelined (overlapped) ticks."""
+    cfg = model_and_params[0]
+    prompts = make_prompts(cfg, 6)
+    eng = make_engine(model_and_params, timeslice=4, prefix_cache=True)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=7))
+    ref = {tuple(r.prompt): list(r.out_tokens) for r in eng.run()}
+
+    async def go():
+        eng2 = make_engine(model_and_params, timeslice=4,
+                           prefix_cache=True)
+        pipe = PipelinedEngine(eng2, queue_limit=16)
+        srv = GatewayServer(pipe)
+        await srv.start()
+        outs, finals = {}, {}
+
+        async def one(p):
+            toks = []
+            async for kind, payload in sse_generate(
+                    "127.0.0.1", srv.port, p, max_new_tokens=7):
+                if kind == "tokens":
+                    toks.extend(payload)
+                else:
+                    finals[tuple(p)] = (kind, payload)
+            outs[tuple(p)] = toks
+
+        await asyncio.gather(*[one(p) for p in prompts])
+        await srv.drain()
+        return outs, finals, pipe
+
+    outs, finals, pipe = asyncio.run(go())
+    assert outs == ref            # content AND per-request order
+    assert pipe.overlapped_ticks > 0
+    for p in prompts:             # exactly one terminal frame, with stats
+        kind, info = finals[tuple(p)]
+        assert kind == "done"
+        assert info["n_tokens"] == len(ref[tuple(p)])
+        assert info["queue_wait_s"] is not None
+        assert info["ttft_s"] is not None and info["ttft_s"] >= 0
+
+
+def test_pipelined_step_split_matches_step(model_and_params):
+    """schedule/dispatch/emit driven manually is the same machine as
+    ``step()`` — the overlap window moves host work, never device math."""
+    cfg = model_and_params[0]
+    prompts = make_prompts(cfg, 4, seed=3)
+    eng_a = make_engine(model_and_params)
+    eng_b = make_engine(model_and_params)
+    for i, p in enumerate(prompts):
+        eng_a.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        eng_b.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    ref = {r.rid: list(r.out_tokens) for r in eng_a.run()}
+    for _ in range(200):
+        if not (eng_b.active or eng_b.scheduler.has_queued):
+            break
+        eng_b.schedule()
+        work = eng_b.dispatch()
+        if work is not None:
+            work.block()
+        eng_b.emit(work)
+    assert {r.rid: list(r.out_tokens) for r in eng_b.finished} == ref
+
+
+# -- backpressure -----------------------------------------------------------
+
+def test_admission_queue_backpressure(model_and_params):
+    async def go():
+        eng = make_engine(model_and_params)
+        pipe = PipelinedEngine(eng, queue_limit=2)
+        # direct-path bound: third submit bounces before the loop runs
+        pipe.submit([1, 2, 3, 4], max_new_tokens=2)
+        pipe.submit([1, 2, 3, 5], max_new_tokens=2)
+        with pytest.raises(QueueFull):
+            pipe.submit([1, 2, 3, 6], max_new_tokens=2)
+        assert pipe.rejected == 1
+
+        # HTTP path: a zero-capacity gateway answers 429 + Retry-After
+        eng2 = make_engine(model_and_params)
+        srv = GatewayServer(PipelinedEngine(eng2, queue_limit=0),
+                            retry_after_s=7)
+        await srv.start()
+        events = [e async for e in sse_generate(
+            "127.0.0.1", srv.port, [1, 2, 3, 4], max_new_tokens=2)]
+        await srv.drain()
+        assert len(events) == 1
+        kind, info = events[0]
+        assert kind == "http_error" and info["status"] == 429
+        assert info["retry_after"] == "7"
+
+    asyncio.run(go())
+
+
+# -- disconnect / leak accounting ------------------------------------------
+
+def test_mid_stream_disconnect_releases_pages(model_and_params):
+    """A client that vanishes mid-stream must leave the page pool's
+    three-state accounting exact: no page stays referenced by the dead
+    lane, and used + free + cached still covers the whole pool (minus
+    the null page)."""
+    cfg = model_and_params[0]
+    prompts = make_prompts(cfg, 3, seed=5)
+
+    async def go():
+        eng = make_engine(model_and_params, prefix_cache=True)
+        pipe = PipelinedEngine(eng, queue_limit=8)
+        srv = GatewayServer(pipe)
+        await srv.start()
+
+        async def abandoner():
+            # read two token frames, then close the socket without
+            # consuming the rest of the stream
+            async for _ in sse_generate("127.0.0.1", srv.port, prompts[0],
+                                        max_new_tokens=40,
+                                        disconnect_after=2):
+                pass
+
+        async def full(p):
+            return [e async for e in sse_generate(
+                "127.0.0.1", srv.port, p, max_new_tokens=6)]
+
+        await abandoner()
+        # later traffic still serves normally after the cancellation
+        done = await asyncio.gather(full(prompts[1]), full(prompts[2]))
+        await srv.drain()
+        return eng, pipe, done
+
+    eng, pipe, done = asyncio.run(go())
+    assert pipe.cancels == 1
+    assert len(eng.cancelled) == 1
+    cancelled = eng.cancelled[0]
+    assert cancelled.cancelled and len(cancelled.out_tokens) < 40
+    for events in done:
+        assert events[-1][0] == "done"
+    # three-state pool accounting: nothing leaked by the dead lane
+    stats = eng.kv.stats()
+    assert stats["used_pages"] == 0
+    assert (stats["used_pages"] + stats["free_pages"]
+            + stats["cached_pages"]) == stats["n_pages"] - 1
+    # cancelled requests are not serving metrics
+    assert all(not r.cancelled for r in eng.metrics.requests)
+
+
+# -- queue-wait metrics -----------------------------------------------------
+
+def test_queue_wait_metrics(model_and_params):
+    cfg = model_and_params[0]
+    eng = make_engine(model_and_params, n_lanes=1)
+    prompts = make_prompts(cfg, 4, seed=7)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    eng.run()
+    waits = eng.metrics.queue_waits()
+    assert len(waits) == len(prompts)
+    assert all(w >= 0 for w in waits)
+    s = eng.metrics.summary()
+    assert s["queue_wait_s"]["p50"] is not None
+    assert s["queue_wait_s"]["p99"] >= s["queue_wait_s"]["p50"]
+    # single lane: later requests wait strictly longer than the first
+    reqs = sorted(eng.metrics.requests, key=lambda r: r.rid)
+    assert reqs[-1].admit_t - reqs[-1].submit_t \
+        >= reqs[0].admit_t - reqs[0].submit_t
+
+
+# -- GatewayPolicy region ---------------------------------------------------
+
+def _make_tuner(workdir):
+    from repro import at
+    from repro.tuning import DecodeAutoTuner
+    session = at.AutoTuner(str(workdir))
+
+    def make_decode(block_k):
+        return lambda *a, **k: None     # region never routed in this test
+
+    tuner = DecodeAutoTuner(session, make_decode, buckets=(128,),
+                            block_ks=(256,))
+    tuner.add_gateway(max_inflights=(1, 2), admit_batches=(1,))
+    return tuner
+
+
+def _drive(model_and_params, tuner, n_requests, seed=11):
+    cfg = model_and_params[0]
+    prompts = make_prompts(cfg, n_requests, seed=seed)
+
+    async def go():
+        eng = make_engine(model_and_params)
+        pipe = PipelinedEngine(eng, queue_limit=32, tuner=tuner,
+                               policy_window=1)
+        for p in prompts:
+            pipe.submit(p, max_new_tokens=4)
+        pipe.start()
+        await pipe.drain()
+        return pipe
+
+    return asyncio.run(go())
+
+
+def test_gateway_policy_commits_and_warm_loads(model_and_params, tmp_path):
+    tuner = _make_tuner(tmp_path)
+    assert tuner.committed_gateway() is None
+    pipe = _drive(model_and_params, tuner, n_requests=8)
+    # both candidates measured over windows, winner committed + persisted
+    assert pipe.policy_windows >= 2
+    idx = tuner.committed_gateway()
+    assert idx is not None
+    committed = tuner.committed_gateway_params()
+    assert set(committed) == {"max_inflight", "admit_batch"}
+    assert os.path.exists(tmp_path / "OAT_DynamicParamGatewayPolicy.dat")
+    # committed knobs are live on the pipeline
+    assert pipe.knobs.max_inflight == committed["max_inflight"]
+
+    # warm restart: a fresh session over the same workdir starts
+    # committed and runs ZERO measurement windows
+    tuner2 = _make_tuner(tmp_path)
+    assert tuner2.committed_gateway() == idx
+    pipe2 = _drive(model_and_params, tuner2, n_requests=4, seed=12)
+    assert pipe2.policy_windows == 0
+    assert pipe2.knobs.max_inflight == committed["max_inflight"]
+    assert pipe2.knobs.admit_batch == committed["admit_batch"]
+
+
+# -- stats route ------------------------------------------------------------
+
+def test_stats_and_healthz_routes(model_and_params):
+    async def go():
+        eng = make_engine(model_and_params)
+        pipe = PipelinedEngine(eng, queue_limit=4)
+        srv = GatewayServer(pipe)
+        await srv.start()
+        s_health = await get_json("127.0.0.1", srv.port, "/healthz")
+        s_stats = await get_json("127.0.0.1", srv.port, "/v1/stats")
+        s_404 = await get_json("127.0.0.1", srv.port, "/nope")
+        await srv.drain()
+        return s_health, s_stats, s_404
+
+    (hs, health), (ss, stats), (ns, _) = asyncio.run(go())
+    assert hs == 200 and health["ok"] and not health["draining"]
+    assert ss == 200
+    assert {"ticks", "backlog", "policy"} <= set(stats)
+    assert ns == 404
+
+
+# -- compare.py cell-key usage errors ---------------------------------------
+
+def _load_compare():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "compare.py")
+    spec = importlib.util.spec_from_file_location("bench_compare", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _payload(rows, config=None):
+    return {"benchmark": "serving", "config": config or {"requests": 4},
+            "results": rows}
+
+
+def _row(arch="yi-6b", workload="uniform", **kw):
+    return {"arch": arch, "cache": "paged", "workload": workload,
+            "tokens_per_s": 10.0, **kw}
+
+
+def _run_main(cmp_mod, tmp_path, base, cur, argv_extra=()):
+    import sys
+    bp, cp = tmp_path / "base.json", tmp_path / "cur.json"
+    bp.write_text(json.dumps(base))
+    cp.write_text(json.dumps(cur))
+    argv = ["compare", str(bp), str(cp), *argv_extra]
+    old = sys.argv
+    sys.argv = argv
+    try:
+        cmp_mod.main()
+        return 0
+    except SystemExit as e:
+        return e.code or 0
+    finally:
+        sys.argv = old
+
+
+def test_compare_disjoint_keysets_exit2(tmp_path, capsys):
+    cmp_mod = _load_compare()
+    base = _payload([_row(workload="uniform")])
+    cur = _payload([_row(workload="gateway")])
+    assert _run_main(cmp_mod, tmp_path, base, cur) == 2
+    out = capsys.readouterr().out
+    assert "share no cell keys" in out
+    assert "uniform" in out and "gateway" in out   # names missing + extra
+
+
+def test_compare_duplicate_keys_exit2(tmp_path, capsys):
+    cmp_mod = _load_compare()
+    base = _payload([_row(), _row()])      # same key twice
+    cur = _payload([_row()])
+    assert _run_main(cmp_mod, tmp_path, base, cur) == 2
+    assert "duplicate cell keys" in capsys.readouterr().out
+
+
+def test_compare_partial_overlap_still_gates(tmp_path, capsys):
+    """A genuinely dropped cell is a regression (exit 1), not a usage
+    error — the disjoint check must not swallow it."""
+    cmp_mod = _load_compare()
+    base = _payload([_row(), _row(arch="deepseek-7b")])
+    cur = _payload([_row()])
+    assert _run_main(cmp_mod, tmp_path, base, cur) == 1
+    assert "missing from current run" in capsys.readouterr().out
+
+
+def test_compare_gates_goodput_and_slo(tmp_path, capsys):
+    cmp_mod = _load_compare()
+    g = dict(workload="gateway", goodput_tok_s=100.0, slo_attainment=0.9)
+    base = _payload([_row(**g)])
+    ok = _payload([_row(**{**g, "goodput_tok_s": 95.0})])
+    assert _run_main(cmp_mod, tmp_path, base, ok) == 0
+    bad = _payload([_row(**{**g, "goodput_tok_s": 50.0})])
+    assert _run_main(cmp_mod, tmp_path, base, bad) == 1
+    assert "goodput dropped" in capsys.readouterr().out
+    dead = _payload([_row(**{**g, "slo_attainment": 0.0})])
+    assert _run_main(cmp_mod, tmp_path, base, dead) == 1
+    assert "SLO attainment fell to zero" in capsys.readouterr().out
