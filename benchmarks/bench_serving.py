@@ -25,6 +25,13 @@ dispatch) and emits ``BENCH_serving.json``:
   (tokens/s from within-SLO requests), both gated by ``compare.py``;
   latencies in these cells are client-side (queueing + network +
   compute).
+* **kv_dtype** cells — fp vs int8 KV pages on the paged engine at a
+  *fixed byte budget*: both cells get the same pool bytes, so the int8
+  cell (int8 pages + per-row fp32 scales, dequantized in-kernel) buys
+  ~3x the pages and admits more concurrent tokens before swapping.
+  Cells report ``capacity_tokens`` / ``max_concurrent_seqs`` / swap
+  counts plus ``greedy_agreement`` — the int8 cell's token-level match
+  against the fp cell's greedy outputs — both gated by ``compare.py``.
 * **shared_prefix** cells — every request carries the same long system
   prompt (the production shape: few-shot templates, multi-turn history)
   on the chunked paged engine, prefix cache off vs on.  The cached cell
@@ -102,6 +109,81 @@ def bench_one(arch: str, cache: str, n_requests: int, n_lanes: int,
         "cache_stats": engine.kv.stats(),
         "wall_s": wall,
     }
+
+
+def bench_kv_dtype(arch: str, kv_dtype: str, n_requests: int, n_lanes: int,
+                   max_len: int, max_new: int, page_size: int,
+                   timeslice: int | None, seed: int = 0):
+    """fp vs int8 KV pages at a fixed byte budget (one cell per dtype).
+
+    The budget is what the *fp* pool would spend at the uniform cells'
+    undersized parity; each precision buys as many pages as fit in it.
+    int8 pages cost ~1/3 the bytes (int8 payload + per-row fp32 scales
+    vs f32), so the int8 cell runs the identical workload with ~3x the
+    pages — more resident tokens, fewer preemption swaps.
+
+    Returns ``(row, outputs)`` — outputs maps rid -> greedy tokens so
+    the caller can score the int8 cell's agreement against the fp cell.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    blocks_per_seq = -(-max_len // page_size)
+
+    def per_page_bytes(quantized):
+        caches = jax.eval_shape(
+            lambda: model.init_paged_caches(4, page_size,
+                                            quantized=quantized))
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(caches)) / 4
+
+    parity = n_lanes * blocks_per_seq + 1
+    budget = max(blocks_per_seq + 2, int(parity * 0.6)) \
+        * per_page_bytes(False)
+    n_pages = max(blocks_per_seq + 2,
+                  int(budget // per_page_bytes(kv_dtype == "int8")))
+    engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
+                           cache="paged", n_pages=n_pages,
+                           page_size=page_size, timeslice=timeslice,
+                           kv_dtype=kv_dtype)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for rid in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(4, 12))).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt,
+                              max_new_tokens=max_new))
+    finished = engine.run(max_steps=n_requests * (max_new + 6))
+    wall = time.time() - t0
+    s = engine.metrics.summary()
+    st = engine.kv.stats()
+    row = {
+        "arch": arch, "cache": "paged", "workload": "kv_dtype",
+        "kv_dtype": kv_dtype, "n_lanes": n_lanes,
+        "budget_bytes": int(budget), "n_pages": n_pages,
+        "pool_bytes": st["pool_bytes"],
+        "kv_bytes_per_token": st["kv_bytes_per_token"],
+        "capacity_tokens": st["capacity_tokens"],
+        "max_concurrent_seqs": (n_pages - 1) // blocks_per_seq,
+        "swap_outs": st["swap_outs"], "swap_ins": st["swap_ins"],
+        "requests": n_requests, "finished": len(finished),
+        "decode_steps": engine.steps,
+        "generated_tokens": s["generated_tokens"],
+        "tokens_per_s": s["generated_tokens"] / wall if wall else 0.0,
+        "ttft_p50_s": s["ttft_s"]["p50"], "ttft_p99_s": s["ttft_s"]["p99"],
+        "itl_p50_s": s["itl_s"]["p50"], "itl_p99_s": s["itl_s"]["p99"],
+        "preemptions": s["preemptions"],
+        "wall_s": wall,
+    }
+    outputs = {r.rid: list(r.out_tokens) for r in finished}
+    return row, outputs
 
 
 def bench_mixed(arch: str, prefill_chunk: int | None, n_short: int,
@@ -396,6 +478,34 @@ def main() -> None:
                   f"p99 {fmt(row['ttft_p99_s'], '.3f')}s  "
                   f"itl p50 {fmt(row['itl_p50_s'], '.4f')}s  "
                   f"preempt {row['preemptions']}")
+        # kv precision at fixed bytes: the int8 cell buys ~3x the pages
+        # for the same budget and must track the fp cell's greedy
+        # outputs (compare.py gates capacity ratio and agreement)
+        kv_outputs: dict = {}
+        for kvd in ("fp", "int8"):
+            runs = [bench_kv_dtype(arch, kvd, args.requests, args.lanes,
+                                   args.max_len, args.max_new,
+                                   args.page_size, args.timeslice)
+                    for _ in range(max(1, args.repeats))]
+            row, outs = max(runs, key=lambda t: t[0]["tokens_per_s"])
+            kv_outputs[kvd] = outs
+            if kvd == "fp":
+                row["greedy_agreement"] = 1.0
+            else:
+                match = total = 0
+                for rid, ref in kv_outputs["fp"].items():
+                    got = outs.get(rid, [])
+                    total += max(len(ref), len(got))
+                    match += sum(a == b for a, b in zip(ref, got))
+                row["greedy_agreement"] = match / total if total else 1.0
+            results.append(row)
+            print(f"[bench_serving] {arch:14s} paged  kv/{kvd:9s} "
+                  f"{row['tokens_per_s']:8.1f} tok/s  "
+                  f"cap {row['capacity_tokens']} tok "
+                  f"({row['n_pages']} pages, "
+                  f"{row['kv_bytes_per_token']:.0f} B/tok)  "
+                  f"swaps {row['swap_outs']}  "
+                  f"agree {row['greedy_agreement']:.0%}")
         # mixed long/short workload: monolithic vs chunked prefill.  The
         # mixed max_len must fit long_len + max_new headroom.
         mixed_len = max(args.max_len, args.long_len + args.max_new + 2)
@@ -473,6 +583,7 @@ def main() -> None:
               "lanes": args.lanes, "max_len": args.max_len,
               "max_new": args.max_new, "page_size": args.page_size,
               "timeslice": args.timeslice,
+              "kv_dtypes": ["fp", "int8"],
               "prefill_chunk": args.prefill_chunk,
               "long_len": args.long_len, "spec_ks": list(args.spec_ks),
               "prefix_len": args.prefix_len,

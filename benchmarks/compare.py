@@ -17,7 +17,12 @@ current run regresses past the thresholds:
 * a gateway cell's ``goodput_tok_s`` (tokens/s from within-SLO requests)
   drops by more than ``--max-tps-drop``, or its ``slo_attainment`` falls
   to zero while the baseline's is positive (the gateway still moves
-  tokens but none inside the latency SLO).
+  tokens but none inside the latency SLO);
+* a kv_dtype cell's ``capacity_tokens`` (resident tokens the pool holds
+  at its fixed byte budget) drops below the baseline's — quantized pages
+  stopped buying capacity — or its ``greedy_agreement`` (token-level
+  match against the fp cell) falls by more than ``--max-agreement-drop``
+  (default 5 points) — quantization started corrupting outputs.
 
 An absolute TTFT slack (``--ttft-floor``, default 50 ms) absorbs
 scheduler jitter on cells whose TTFT is tiny: a rise only fails the gate
@@ -64,18 +69,21 @@ def cell_key(row: dict) -> tuple:
         row.get("prefill_chunk"),
         row.get("spec_k"),
         row.get("prefix_cache"),
+        row.get("kv_dtype"),
     )
 
 
 def _fmt_key(key: tuple) -> str:
-    if len(key) != 6:  # malformed row: show it verbatim, don't traceback
+    if len(key) != 7:  # malformed row: show it verbatim, don't traceback
         return repr(key)
-    arch, cache, workload, chunk, spec_k, prefix_cache = key
+    arch, cache, workload, chunk, spec_k, prefix_cache, kv_dtype = key
     mode = f"/chunk={chunk}" if chunk else ""
     if spec_k is not None:
         mode += f"/k={spec_k}"
     if prefix_cache is not None:
         mode += f"/prefix={'on' if prefix_cache else 'off'}"
+    if kv_dtype is not None:
+        mode += f"/kv={kv_dtype}"
     return f"{arch}:{cache}:{workload}{mode}"
 
 
@@ -127,6 +135,7 @@ def compare(
     max_tps_drop: float = 0.20,
     max_ttft_rise: float = 0.25,
     ttft_floor_s: float = 0.05,
+    max_agreement_drop: float = 0.05,
 ) -> list[str]:
     """Return the list of failure messages (empty == gate passes)."""
     failures: list[str] = []
@@ -181,6 +190,21 @@ def compare(
                 f"(baseline {b_slo:.1%}) — tokens still flow but none "
                 f"inside the latency SLO"
             )
+        b_cap, c_cap = base.get("capacity_tokens"), cur.get("capacity_tokens")
+        if b_cap and c_cap is not None and c_cap < b_cap:
+            failures.append(
+                f"{name}: pool capacity dropped {b_cap} -> {c_cap} "
+                f"resident tokens at the fixed byte budget — quantized "
+                f"pages stopped buying capacity"
+            )
+        b_agr = base.get("greedy_agreement")
+        c_agr = cur.get("greedy_agreement")
+        if b_agr and c_agr is not None and b_agr - c_agr > max_agreement_drop:
+            failures.append(
+                f"{name}: greedy agreement fell {b_agr:.1%} -> {c_agr:.1%} "
+                f"(limit {max_agreement_drop:.0%} drop) — quantized pages "
+                f"are corrupting outputs"
+            )
     return failures
 
 
@@ -205,6 +229,12 @@ def main() -> None:
         type=float,
         default=0.05,
         help="absolute TTFT slack in seconds (jitter floor)",
+    )
+    ap.add_argument(
+        "--max-agreement-drop",
+        type=float,
+        default=0.05,
+        help="max allowed drop in a kv_dtype cell's greedy agreement",
     )
     args = ap.parse_args()
 
@@ -244,6 +274,7 @@ def main() -> None:
         args.max_tps_drop,
         args.max_ttft_rise,
         args.ttft_floor,
+        args.max_agreement_drop,
     )
     compared = len(set(baseline) & set(current))
     if failures:

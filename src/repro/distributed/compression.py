@@ -32,6 +32,25 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def quantize_int8_rows(x: jax.Array):
+    """Per-row int8 quantization: one fp32 scale per last-axis row.
+
+    Returns ``(q int8, scale f32)`` with ``scale.shape == x.shape[:-1]``.
+    Row granularity is what the paged KV pool wants — each (page, head,
+    slot) row quantizes independently, so a decode-step append or a COW
+    page copy never forces a whole-page requantization.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    y = x.astype(jnp.float32) / scale[..., None]
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
 def compressed_psum(x: jax.Array, axis_name: str,
                     key: jax.Array | None = None) -> jax.Array:
     """int8 all-gather + local sum over ``axis_name``.
@@ -52,3 +71,10 @@ def compress_roundtrip_error(x: jax.Array) -> jax.Array:
     """Quantization round-trip error (tests / telemetry)."""
     q, s = quantize_int8(x)
     return jnp.max(jnp.abs(dequantize_int8(q, s) - x.astype(jnp.float32)))
+
+
+def compress_roundtrip_error_rows(x: jax.Array) -> jax.Array:
+    """Per-row quantization round-trip error (tests / telemetry)."""
+    q, s = quantize_int8_rows(x)
+    return jnp.max(
+        jnp.abs(dequantize_int8_rows(q, s) - x.astype(jnp.float32)))

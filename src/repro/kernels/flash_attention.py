@@ -492,6 +492,239 @@ def flash_paged_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out[:, :, :c, :]
 
 
+# --------------------------------------------------------------------------
+# quantized paged kernels: int8 pages + per-row fp32 scales, dequantized
+# in-kernel into the same fp32 online-softmax accumulator path
+# --------------------------------------------------------------------------
+
+
+def _paged_decode_quant_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                               ks_ref, vs_ref, o_ref, m_ref, l_ref,
+                               acc_ref, *, scale: float, block_k: int,
+                               n_blk: int):
+    b, ik = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    k_start = ik * block_k
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, d)
+        # int8 tile * per-row scale -> fp32 keys; rest identical to the
+        # fp kernel (the accumulator path never sees int8)
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_blk - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "scale",
+                                             "interpret"))
+def flash_paged_decode_quant(q: jax.Array, k_pool: jax.Array,
+                             v_pool: jax.Array, k_scale: jax.Array,
+                             v_scale: jax.Array, page_table: jax.Array,
+                             kv_len: jax.Array, *,
+                             block_k: int | None = None,
+                             scale: float | None = None,
+                             interpret: bool = False) -> jax.Array:
+    """:func:`flash_paged_decode` over int8 pools.
+
+    Pools (P, Hkv, psz, D) int8; ``k_scale``/``v_scale`` (P, Hkv, psz)
+    fp32, one scale per (page, head, slot) row.  Scale tiles ride the
+    same page-table-indexed BlockSpecs as their pools and the kernel
+    dequantizes in VMEM right before the fp32 dot — the softmax
+    accumulator path is byte-for-byte the fp kernel's.
+    """
+    b, h, one, d = q.shape
+    n_pages, hkv, psz, _ = k_pool.shape
+    assert one == 1
+    g = h // hkv
+    nblk = page_table.shape[1]
+    scale = float(scale if scale is not None else d ** -0.5)
+    bk = min(block_k, psz) if block_k else psz
+    if psz % bk:
+        bk = psz                     # block must tile the page exactly
+    sub = psz // bk                  # sub-blocks per page
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, nblk * sub)
+    kernel = functools.partial(_paged_decode_quant_kernel, scale=scale,
+                               block_k=bk, n_blk=grid[2])
+    pool_spec = pl.BlockSpec((1, 1, bk, d),
+                             lambda bb, hh, ik, tbl, ln, s=sub:
+                             (tbl[bb, ik // s], hh, ik % s, 0))
+    scale_spec = pl.BlockSpec((1, 1, bk),
+                              lambda bb, hh, ik, tbl, ln, s=sub:
+                              (tbl[bb, ik // s], hh, ik % s))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+            pool_spec,
+            pool_spec,
+            scale_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
+      qg, k_pool, v_pool, k_scale, v_scale)
+    return out.reshape(b, h, 1, d)
+
+
+def _paged_prefill_quant_kernel(tbl_ref, start_ref, len_ref, q_ref, k_ref,
+                                v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref,
+                                acc_ref, *, scale: float, block_q: int,
+                                block_k: int, n_k: int):
+    b, iq, ik = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    q_start = start_ref[b] + iq * block_q     # absolute pos of q row 0
+    k_start = ik * block_k
+
+    live = jnp.logical_and(k_start < kv_len,
+                           k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+        mask = (kj <= qi) & (kj < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "interpret"))
+def flash_paged_prefill_quant(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, k_scale: jax.Array,
+                              v_scale: jax.Array, page_table: jax.Array,
+                              start: jax.Array, kv_len: jax.Array, *,
+                              block_q: int = 128,
+                              block_k: int | None = None,
+                              scale: float | None = None,
+                              interpret: bool = False) -> jax.Array:
+    """:func:`flash_paged_prefill` over int8 pools (verify rides this too).
+
+    Same contract as the fp kernel plus ``k_scale``/``v_scale``
+    (P, Hkv, psz) per-row fp32 scales, dequantized in VMEM ahead of the
+    fp32 score/accumulate dots.
+    """
+    b, h, c, d = q.shape
+    n_pages, hkv, psz, _ = k_pool.shape
+    g = h // hkv
+    nblk = page_table.shape[1]
+    scale = float(scale if scale is not None else d ** -0.5)
+    bq = min(block_q, c)
+    pq = (-c) % bq
+    if pq:                       # pad the chunk to a whole q tile; padded
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))   # rows discard
+    cp = q.shape[2]
+    bk = min(block_k, psz) if block_k else psz
+    if psz % bk:
+        bk = psz                 # block must tile the page exactly
+    sub = psz // bk              # sub-blocks per page
+    grid = (b, h, cp // bq, nblk * sub)
+    kernel = functools.partial(_paged_prefill_quant_kernel, scale=scale,
+                               block_q=bq, block_k=bk, n_k=grid[3])
+    pool_spec = pl.BlockSpec((1, 1, bk, d),
+                             lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+                             (tbl[bb, ik // s], hh // g, ik % s, 0))
+    scale_spec = pl.BlockSpec((1, 1, bk),
+                              lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+                              (tbl[bb, ik // s], hh // g, ik % s))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bb, hh, iq, ik, tbl, st, ln:
+                         (bb, hh, iq, 0)),
+            pool_spec,
+            pool_spec,
+            scale_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, hh, iq, ik, tbl, st, ln:
+                               (bb, hh, iq, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, cp, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), start.astype(jnp.int32),
+      kv_len.astype(jnp.int32), q, k_pool, v_pool, k_scale, v_scale)
+    return out[:, :, :c, :]
+
+
 def attention_vmem_bytes(block_q: int, block_k: int, d: int,
                          bytes_per_el: int = 2) -> int:
     """Analytic VMEM footprint per grid step (CPU-side AT cost model)."""

@@ -18,7 +18,8 @@ from ..at.session import publish as _publish
 from ..at.session import tuned as _tuned
 from . import ref
 from .flash_attention import (flash_attention, flash_decode,
-                              flash_paged_decode, flash_paged_prefill)
+                              flash_paged_decode, flash_paged_decode_quant,
+                              flash_paged_prefill, flash_paged_prefill_quant)
 from .matmul import matmul
 from .ssm_scan import selective_scan
 
@@ -81,6 +82,7 @@ def decode_attention(q, k, v, kv_len=None, *, use_kernel: bool | None = None,
 
 
 def paged_decode_attention(q, k_pool, v_pool, page_table, kv_len, *,
+                           k_scale=None, v_scale=None,
                            use_kernel: bool | None = None, **pps):
     """Decode attention over a paged KV cache (serving hot path).
 
@@ -90,19 +92,27 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, kv_len, *,
     ``DecodeAutoTuner`` publishes the per-bucket ``block_k`` sub-page
     tile) flow into the kernel call; the page size itself is structural —
     it is fixed when the pool is built, not a per-call knob.
+    ``k_scale``/``v_scale`` (P, Hkv, psz fp32 per-row scales) switch both
+    backends to the int8 in-kernel-dequant variant.
     """
     if use_kernel is None:
         use_kernel = not on_cpu()
     if not use_kernel:
-        return ref.paged_decode_ref(q, k_pool, v_pool, page_table, kv_len)
+        return ref.paged_decode_ref(q, k_pool, v_pool, page_table, kv_len,
+                                    k_scale=k_scale, v_scale=v_scale)
     kw = tuned("flash_paged_decode")
     kw.update(pps)
     kw = {k: v for k, v in kw.items() if k in ("block_k", "scale")}
+    if k_scale is not None:
+        return flash_paged_decode_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                        page_table, kv_len,
+                                        interpret=on_cpu(), **kw)
     return flash_paged_decode(q, k_pool, v_pool, page_table, kv_len,
                               interpret=on_cpu(), **kw)
 
 
 def paged_prefill_attention(q, k_pool, v_pool, page_table, start, kv_len, *,
+                            k_scale=None, v_scale=None,
                             use_kernel: bool | None = None, **pps):
     """Chunked-prefill attention over a paged KV cache (serving hot path).
 
@@ -113,21 +123,28 @@ def paged_prefill_attention(q, k_pool, v_pool, page_table, start, kv_len, *,
     read).  Tuned PPs published under ``flash_paged_prefill`` — the
     serving prefill region tunes the (block_q x block_k) tile per prompt
     bucket x chunk size — flow into the kernel call; on CPU the gather
-    oracle runs instead.
+    oracle runs instead.  ``k_scale``/``v_scale`` switch both backends to
+    the int8 in-kernel-dequant variant.
     """
     if use_kernel is None:
         use_kernel = not on_cpu()
     if not use_kernel:
         return ref.paged_prefill_ref(q, k_pool, v_pool, page_table,
-                                     start, kv_len)
+                                     start, kv_len,
+                                     k_scale=k_scale, v_scale=v_scale)
     kw = tuned("flash_paged_prefill")
     kw.update(pps)
     kw = {k: v for k, v in kw.items() if k in ("block_q", "block_k", "scale")}
+    if k_scale is not None:
+        return flash_paged_prefill_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                         page_table, start, kv_len,
+                                         interpret=on_cpu(), **kw)
     return flash_paged_prefill(q, k_pool, v_pool, page_table, start, kv_len,
                                interpret=on_cpu(), **kw)
 
 
 def paged_verify_attention(q, k_pool, v_pool, page_table, start, kv_len, *,
+                           k_scale=None, v_scale=None,
                            use_kernel: bool | None = None, **pps):
     """Speculative-decode verify attention over a paged KV cache.
 
@@ -145,10 +162,15 @@ def paged_verify_attention(q, k_pool, v_pool, page_table, start, kv_len, *,
         use_kernel = not on_cpu()
     if not use_kernel:
         return ref.paged_prefill_ref(q, k_pool, v_pool, page_table,
-                                     start, kv_len)
+                                     start, kv_len,
+                                     k_scale=k_scale, v_scale=v_scale)
     kw = tuned("flash_paged_verify")
     kw.update(pps)
     kw = {k: v for k, v in kw.items() if k in ("block_q", "block_k", "scale")}
+    if k_scale is not None:
+        return flash_paged_prefill_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                         page_table, start, kv_len,
+                                         interpret=on_cpu(), **kw)
     return flash_paged_prefill(q, k_pool, v_pool, page_table, start, kv_len,
                                interpret=on_cpu(), **kw)
 

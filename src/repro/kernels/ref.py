@@ -56,10 +56,22 @@ def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return attention_ref(q, k, v, causal=False, scale=scale, kv_len=kv_len)
 
 
+def _dequantize_pools(k_pool, v_pool, k_scale, v_scale):
+    """int8 pools -> fp32 via per-row scales (P, Hkv, psz); no-op when no
+    scales are given (fp pools)."""
+    if k_scale is not None:
+        k_pool = k_pool.astype(jnp.float32) * k_scale[..., None]
+    if v_scale is not None:
+        v_pool = v_pool.astype(jnp.float32) * v_scale[..., None]
+    return k_pool, v_pool
+
+
 def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                      page_table: jax.Array,
                      kv_len: jax.Array | None = None,
-                     scale: float | None = None) -> jax.Array:
+                     scale: float | None = None,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None) -> jax.Array:
     """Paged one-token decode oracle.
 
     q: (B, H, 1, D); pools (P, Hkv, psz, D) hold pages shared by all
@@ -67,10 +79,13 @@ def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block to a physical page (entries beyond ``kv_len`` are ignored — they
     may point anywhere, typically page 0).  Gathers the pages into a dense
     (B, Hkv, nblk*psz, D) view and reuses the dense decode oracle.
+    Quantized mode: int8 pools plus ``k_scale``/``v_scale`` per-row fp32
+    scales (P, Hkv, psz) dequantize before the gather.
     """
     b = q.shape[0]
     _, hkv, psz, d = k_pool.shape
     nblk = page_table.shape[1]
+    k_pool, v_pool = _dequantize_pools(k_pool, v_pool, k_scale, v_scale)
     k = k_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
         b, hkv, nblk * psz, d)
     v = v_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
@@ -81,7 +96,9 @@ def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 def paged_prefill_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       page_table: jax.Array, start: jax.Array,
                       kv_len: jax.Array,
-                      scale: float | None = None) -> jax.Array:
+                      scale: float | None = None,
+                      k_scale: jax.Array | None = None,
+                      v_scale: jax.Array | None = None) -> jax.Array:
     """Chunked-prefill attention oracle over a paged KV cache.
 
     q: (B, H, C, D) — one prompt *chunk* whose first token sits at absolute
@@ -100,6 +117,7 @@ def paged_prefill_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     nblk = page_table.shape[1]
     g = h // hkv
     scale = float(scale if scale is not None else d ** -0.5)
+    k_pool, v_pool = _dequantize_pools(k_pool, v_pool, k_scale, v_scale)
     k = k_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
         b, hkv, nblk * psz, d)
     v = v_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(

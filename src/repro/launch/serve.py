@@ -24,6 +24,13 @@ becomes the ``PrefixPolicy`` tuning region.  ``--shared-prefix N`` makes
 the synthetic workload share an N-token system prompt so the index
 actually gets hits.
 
+``--kv-dtype int8`` (paged) stores KV pages as int8 with per-row fp32
+scales — ~3x more tokens per byte at this scale — dequantizing inside
+the attention kernels; ``--kv-dtype auto`` (with ``--autotune``) lets
+the ``KVPrecision_{b}`` regions calibrate fp vs int8 (x block_k) per
+length bucket under a greedy-agreement quality guard, then builds the
+pool from the majority winner.
+
 ``--draft`` turns on speculative decoding (paged only): a reduced-depth
 draft sliced from the target's own layers proposes ``--spec-k`` tokens
 per tick and the target verifies them in one chunked call; with
@@ -52,11 +59,86 @@ from ..models import build_model
 from ..serving import REDUCED_BUCKETS, Request, SamplingParams, ServingEngine
 
 
+def _make_kv_precision_bench(model, page_size: int, lanes: int = 2,
+                             decode_steps: int = 3):
+    """Calibration microbench for the KVPrecision regions.
+
+    ``make_variant(bucket, kv_dtype, block_k)`` builds one candidate: a
+    throwaway paged pool of the requested precision, one prefill over a
+    synthetic prompt plus a few greedy decode steps, timed end to end.
+    The variant reports ``time_per_token`` and ``agreement`` — the
+    fraction of its greedy tokens matching the fp reference for the same
+    bucket (fp candidates *are* the reference: agreement 1.0 by
+    construction, so the quality-guarded pool is never empty).
+
+    The prompt is capped at 4 pages so every bucket's calibration shares
+    one trace per cache structure (fp / int8); buckets differ in prompt
+    *content*, standing in for length-dependent behaviour at CPU scale
+    without a retrace per bucket.
+    """
+    jnp = jax.numpy
+    prefill_jit = jax.jit(model.paged_prefill_step)
+    decode_jit = jax.jit(model.paged_decode_step)
+    ref_tokens: dict[int, list] = {}
+
+    def run(bucket, kv_dtype, block_k, params):
+        plen = min(bucket, 4 * page_size)
+        blocks = -(-(plen + decode_steps) // page_size)
+        caches = model.init_paged_caches(lanes * blocks + 1, page_size,
+                                         quantized=kv_dtype == "int8")
+        table = jnp.asarray(
+            (np.arange(lanes)[:, None] * blocks
+             + np.arange(blocks)[None, :] + 1).astype(np.int32))
+        rng = np.random.default_rng(bucket)
+        prompt = jnp.asarray(np.tile(
+            rng.integers(0, model.cfg.vocab_size, size=plen),
+            (lanes, 1)).astype(np.int32))
+        start = jnp.zeros((lanes,), jnp.int32)
+        kv_len = jnp.full((lanes,), plen, jnp.int32)
+        at.publish("flash_paged_decode", block_k=block_k)
+        at.publish("flash_paged_prefill", block_k=block_k)
+        t0 = time.perf_counter()
+        logits, caches = prefill_jit(params, caches, table, prompt,
+                                     start, kv_len, kv_len - 1)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [int(tok[0])]
+        pos = kv_len
+        for _ in range(decode_steps):
+            logits, caches = decode_jit(params, caches, table,
+                                        tok[:, None], pos)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(int(tok[0]))
+            pos = pos + 1
+        dt = time.perf_counter() - t0
+        return toks, dt / (1 + decode_steps)
+
+    def make_variant(bucket, kv_dtype, block_k):
+        def variant(params, bucket=bucket, kv_dtype=kv_dtype,
+                    block_k=block_k):
+            toks, tpt = run(bucket, kv_dtype, block_k, params)
+            if kv_dtype == "fp":
+                ref_tokens.setdefault(bucket, toks)
+                agreement = 1.0
+            else:
+                if bucket not in ref_tokens:   # int8 measured first
+                    ref_tokens[bucket], _ = run(bucket, "fp", block_k,
+                                                params)
+                ref = ref_tokens[bucket]
+                agreement = sum(a == r for a, r in zip(toks, ref)) \
+                    / max(len(ref), 1)
+            return {"kv_dtype": kv_dtype, "block_k": block_k,
+                    "time_per_token": tpt, "agreement": agreement}
+        return variant
+
+    return make_variant
+
+
 def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                     gateway: bool = False,
                     prefill_chunk: int | None = None,
                     spec_k: int | None = None,
-                    prefix_cache: bool = False):
+                    prefix_cache: bool = False,
+                    kv_precision: bool = False):
     """Per-bucket dynamic select over decode variants (repro.at session).
 
     Each candidate gets its own jit cache and publishes its block PPs
@@ -178,6 +260,15 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                 return variant
 
             tuner.add_prefix_policy(make_policy)
+        if kv_precision:
+            # pool precision is lossy, so the region couples latency to a
+            # quality guard: an int8 candidate may only win while its
+            # greedy tokens track the fp reference (fp reports agreement
+            # 1.0, keeping the guarded pool non-empty)
+            tuner.add_kv_precision(
+                _make_kv_precision_bench(model, page_size),
+                block_ks=(max(1, page_size // 2), page_size),
+                buckets=REDUCED_BUCKETS)
         if gateway:
             # the gateway's concurrency product (pipeline depth x
             # admission batch) — measured over traffic windows and
@@ -276,7 +367,12 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
           top_p: float = 1.0, prefix_cache: bool = False,
           shared_prefix: int = 0, gateway: bool = False, port: int = 0,
           queue_limit: int = 64, policy_window: int = 2,
-          slo_ttft_s: float = 30.0, slo_itl_s: float = 5.0) -> dict:
+          slo_ttft_s: float = 30.0, slo_itl_s: float = 5.0,
+          kv_dtype: str = "fp") -> dict:
+    if kv_dtype not in ("fp", "int8", "auto"):
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+    if kv_dtype == "auto" and not (cache == "paged" and autotune):
+        raise ValueError("--kv-dtype auto needs --cache paged --autotune")
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -291,8 +387,20 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
                             gateway=gateway,
                             prefill_chunk=prefill_chunk,
                             spec_k=spec_k if draft else None,
-                            prefix_cache=prefix_cache) \
+                            prefix_cache=prefix_cache,
+                            kv_precision=kv_dtype == "auto") \
         if autotune else None
+    resolved_kv = kv_dtype
+    if kv_dtype == "auto":
+        # calibrate every (precision x block_k) candidate per bucket,
+        # then collapse the committed winners into one structural pool
+        # dtype (majority vote) — the pool is built once, up front.  A
+        # warm restart finds every region already committed and runs
+        # zero measurements.
+        for b in tuner.kv_buckets:
+            while not tuner.kv_precision_committed(b):
+                tuner.kv_precision(b, params)
+        resolved_kv = tuner.resolve_kv_dtype()
     engine = ServingEngine(model, params, n_lanes=n_lanes, max_len=max_len,
                            autotuner=tuner, cache=cache, n_pages=n_pages,
                            page_size=page_size, timeslice=timeslice,
@@ -300,7 +408,8 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
                            draft_model=draft_model,
                            draft_params=draft_params,
                            spec_k=spec_k if draft else None,
-                           prefix_cache=prefix_cache)
+                           prefix_cache=prefix_cache,
+                           kv_dtype=resolved_kv)
     rng = np.random.default_rng(seed)
     # shared_prefix > 0 prepends one common system prompt to every
     # request — the workload that makes the prefix cache earn its keep
@@ -367,6 +476,9 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
         "committed_gateway": (tuner.committed_gateway_params()
                               if tuner and tuner.gateway_region is not None
                               else None),
+        "kv_dtype": resolved_kv,
+        "committed_kv_precision": (tuner.committed_kv_precision_params()
+                                   if tuner and tuner.kv_regions else None),
     }
 
 
@@ -395,6 +507,13 @@ def main() -> None:
                          "self-speculative draft (target's leading layers)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed per speculative tick")
+    ap.add_argument("--kv-dtype", choices=("fp", "int8", "auto"),
+                    default="fp",
+                    help="paged: KV page precision — fp pool dtype, int8 "
+                         "pages with per-row scales and in-kernel "
+                         "dequant, or auto (KVPrecision regions "
+                         "calibrate fp vs int8 under a greedy-agreement "
+                         "guard; needs --autotune)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="paged+chunked: content-addressed prefix caching "
                          "(refcounted shared pages, copy-on-write)")
@@ -439,7 +558,8 @@ def main() -> None:
                 shared_prefix=args.shared_prefix, gateway=args.gateway,
                 port=args.port, queue_limit=args.queue_limit,
                 policy_window=args.policy_window,
-                slo_ttft_s=args.slo_ttft, slo_itl_s=args.slo_itl)
+                slo_ttft_s=args.slo_ttft, slo_itl_s=args.slo_itl,
+                kv_dtype=args.kv_dtype)
     def fmt(x, spec):
         return format(x, spec) if x is not None else "n/a"
 
@@ -455,6 +575,11 @@ def main() -> None:
                       f"{out['requests']} ({p['hit_rate']:.0%}, "
                       f"{p['hit_tokens']} tok, "
                       f"{p['pages_saved']} pages saved)")
+    if out["kv_dtype"] != "fp":
+        c = out["cache"]
+        spec_note += (f", kv {out['kv_dtype']} "
+                      f"({c['kv_bytes_per_token']:.0f} B/tok, "
+                      f"cap {c['capacity_tokens']} tok)")
     if out["gateway"] is not None:
         g = out["gateway"]
         spec_note += (f", gateway {g['goodput_tok_s']:.1f} good tok/s "

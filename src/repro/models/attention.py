@@ -17,6 +17,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..distributed.compression import quantize_int8_rows
 from ..kernels import ops
 from .layers import apply_rope, dense_init
 from .sharding_ctx import constrain
@@ -115,7 +116,7 @@ def decode(p: dict, x: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
 
 def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
                  v_pool: jax.Array, page_table: jax.Array,
-                 pos: jax.Array, cfg: AttnConfig):
+                 pos: jax.Array, cfg: AttnConfig, scales=None):
     """One-token decode against a paged KV cache.
 
     x: (B, 1, d); pools (P, Hkv, psz, Dh) are shared by every sequence,
@@ -124,6 +125,12 @@ def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
     cannot race between lanes).  The new token's KV lands in page
     ``table[b, pos // psz]`` at slot ``pos % psz``.  Sliding-window archs
     are not supported on this path (their ring buffer is already O(W)).
+
+    ``scales``: for int8 pools, ``(k_scale, v_scale)`` fp32 arrays of
+    shape (P, Hkv, psz) — one scale per (page, head, slot) row.  The new
+    token's KV is quantized on the way in and attention dequantizes
+    in-kernel.  Returns ``(out, k_pool, v_pool, scales)``; ``scales`` is
+    None on the fp path.
     """
     assert cfg.window is None, "paged decode does not support SWA archs"
     b, one, _ = x.shape
@@ -136,19 +143,35 @@ def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
     hidx = jnp.arange(cfg.n_kv_heads)[None, :, None, None]
     sidx = slot[:, None, None, None]
     didx = jnp.arange(cfg.d_head)[None, None, None, :]
-    k_pool = k_pool.at[pidx, hidx, sidx, didx].set(
-        k[:, :, :1, :].astype(k_pool.dtype))
-    v_pool = v_pool.at[pidx, hidx, sidx, didx].set(
-        v[:, :, :1, :].astype(v_pool.dtype))
+    k_scale = v_scale = None
+    if scales is not None:
+        k_scale, v_scale = scales
+        kq, ks = quantize_int8_rows(k[:, :, :1, :])       # ks: (B, Hkv, 1)
+        vq, vs = quantize_int8_rows(v[:, :, :1, :])
+        k_pool = k_pool.at[pidx, hidx, sidx, didx].set(kq)
+        v_pool = v_pool.at[pidx, hidx, sidx, didx].set(vq)
+        sp = phys[:, None, None]
+        sh = jnp.arange(cfg.n_kv_heads)[None, :, None]
+        ss = slot[:, None, None]
+        k_scale = k_scale.at[sp, sh, ss].set(ks)
+        v_scale = v_scale.at[sp, sh, ss].set(vs)
+        scales = (k_scale, v_scale)
+    else:
+        k_pool = k_pool.at[pidx, hidx, sidx, didx].set(
+            k[:, :, :1, :].astype(k_pool.dtype))
+        v_pool = v_pool.at[pidx, hidx, sidx, didx].set(
+            v[:, :, :1, :].astype(v_pool.dtype))
     kv_len = (pos + 1).astype(jnp.int32)
-    out = ops.paged_decode_attention(q, k_pool, v_pool, page_table, kv_len)
+    out = ops.paged_decode_attention(q, k_pool, v_pool, page_table, kv_len,
+                                     k_scale=k_scale, v_scale=v_scale)
     out = out.transpose(0, 2, 1, 3).reshape(b, one, cfg.n_heads * cfg.d_head)
-    return out @ p["wo"], k_pool, v_pool
+    return out @ p["wo"], k_pool, v_pool, scales
 
 
 def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
                   v_pool: jax.Array, page_table: jax.Array,
-                  start: jax.Array, kv_len: jax.Array, cfg: AttnConfig):
+                  start: jax.Array, kv_len: jax.Array, cfg: AttnConfig,
+                  scales=None):
     """One prompt *chunk* against a paged KV cache.
 
     x: (B, C, d) — chunk tokens whose first token sits at absolute
@@ -158,20 +181,24 @@ def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
     (padded tail positions — ``pos >= kv_len`` — are redirected to the
     null page 0 so ragged chunks can never corrupt live pages), then
     attention runs over the committed prefix plus the chunk's causal
-    triangle.  Returns (out, k_pool, v_pool).
+    triangle.  Returns (out, k_pool, v_pool, scales) — ``scales`` is the
+    updated ``(k_scale, v_scale)`` pair for int8 pools, None for fp.
     """
-    q, k_pool, v_pool = _paged_chunk_scatter(p, x, k_pool, v_pool,
-                                             page_table, start, kv_len, cfg)
+    q, k_pool, v_pool, scales = _paged_chunk_scatter(
+        p, x, k_pool, v_pool, page_table, start, kv_len, cfg, scales)
+    k_scale, v_scale = scales if scales is not None else (None, None)
     out = ops.paged_prefill_attention(q, k_pool, v_pool, page_table,
-                                      start, kv_len)
+                                      start, kv_len,
+                                      k_scale=k_scale, v_scale=v_scale)
     b, c, _ = x.shape
     out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
-    return out @ p["wo"], k_pool, v_pool
+    return out @ p["wo"], k_pool, v_pool, scales
 
 
 def paged_verify(p: dict, x: jax.Array, k_pool: jax.Array,
                  v_pool: jax.Array, page_table: jax.Array,
-                 start: jax.Array, kv_len: jax.Array, cfg: AttnConfig):
+                 start: jax.Array, kv_len: jax.Array, cfg: AttnConfig,
+                 scales=None):
     """Speculative-verify attention: one *candidate* chunk against a paged
     KV cache.
 
@@ -183,25 +210,30 @@ def paged_verify(p: dict, x: jax.Array, k_pool: jax.Array,
     tuned separately (verify chunks are k+1 tokens wide, not a prefill
     chunk).  Rejected drafts' KV lands in the pages and is rolled back by
     the cache layer (``truncate_to``); padded rows (``pos >= kv_len``)
-    route to the null page as in prefill.  Returns (out, k_pool, v_pool).
+    route to the null page as in prefill.  Returns
+    (out, k_pool, v_pool, scales).
     """
-    q, k_pool, v_pool = _paged_chunk_scatter(p, x, k_pool, v_pool,
-                                             page_table, start, kv_len, cfg)
+    q, k_pool, v_pool, scales = _paged_chunk_scatter(
+        p, x, k_pool, v_pool, page_table, start, kv_len, cfg, scales)
+    k_scale, v_scale = scales if scales is not None else (None, None)
     out = ops.paged_verify_attention(q, k_pool, v_pool, page_table,
-                                     start, kv_len)
+                                     start, kv_len,
+                                     k_scale=k_scale, v_scale=v_scale)
     b, c, _ = x.shape
     out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
-    return out @ p["wo"], k_pool, v_pool
+    return out @ p["wo"], k_pool, v_pool, scales
 
 
 def _paged_chunk_scatter(p: dict, x: jax.Array, k_pool: jax.Array,
                          v_pool: jax.Array, page_table: jax.Array,
                          start: jax.Array, kv_len: jax.Array,
-                         cfg: AttnConfig):
+                         cfg: AttnConfig, scales=None):
     """Project a chunk's QKV at absolute positions and scatter its KV into
     the pages (write-before-read contract shared by prefill and verify).
     Padded tail positions — ``pos >= kv_len`` — are redirected to the
-    null page 0 so ragged chunks can never corrupt live pages."""
+    null page 0 so ragged chunks can never corrupt live pages.  For int8
+    pools (``scales`` given) the chunk's KV is quantized per row on the
+    way in and the matching scale rows are scattered alongside."""
     assert cfg.window is None, "paged chunk attention does not support SWA"
     b, c, _ = x.shape
     psz = k_pool.shape[2]
@@ -214,9 +246,22 @@ def _paged_chunk_scatter(p: dict, x: jax.Array, k_pool: jax.Array,
     hidx = jnp.arange(cfg.n_kv_heads)[None, :, None, None]
     sidx = slot[:, None, :, None]
     didx = jnp.arange(cfg.d_head)[None, None, None, :]
-    k_pool = k_pool.at[pidx, hidx, sidx, didx].set(k.astype(k_pool.dtype))
-    v_pool = v_pool.at[pidx, hidx, sidx, didx].set(v.astype(v_pool.dtype))
-    return q, k_pool, v_pool
+    if scales is not None:
+        k_scale, v_scale = scales
+        kq, ks = quantize_int8_rows(k)                # ks: (B, Hkv, C)
+        vq, vs = quantize_int8_rows(v)
+        k_pool = k_pool.at[pidx, hidx, sidx, didx].set(kq)
+        v_pool = v_pool.at[pidx, hidx, sidx, didx].set(vq)
+        sp = phys[:, None, :]                                 # (B, 1, C)
+        sh = jnp.arange(cfg.n_kv_heads)[None, :, None]
+        ss = slot[:, None, :]
+        k_scale = k_scale.at[sp, sh, ss].set(ks)
+        v_scale = v_scale.at[sp, sh, ss].set(vs)
+        scales = (k_scale, v_scale)
+    else:
+        k_pool = k_pool.at[pidx, hidx, sidx, didx].set(k.astype(k_pool.dtype))
+        v_pool = v_pool.at[pidx, hidx, sidx, didx].set(v.astype(v_pool.dtype))
+    return q, k_pool, v_pool, scales
 
 
 def init_paged_pool(n_pages: int, cfg: AttnConfig, page_size: int,
@@ -224,6 +269,14 @@ def init_paged_pool(n_pages: int, cfg: AttnConfig, page_size: int,
     """Physical page pool for one layer: (P, Hkv, psz, Dh) k and v."""
     shape = (n_pages, cfg.n_kv_heads, page_size, cfg.d_head)
     return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def init_paged_scales(n_pages: int, cfg: AttnConfig, page_size: int):
+    """Per-row fp32 scales for an int8 page pool: (P, Hkv, psz) k and v.
+    Zero scales dequantize untouched rows to exactly 0.0, matching the
+    zero-initialized fp pool."""
+    shape = (n_pages, cfg.n_kv_heads, page_size)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
 
 
 def init_cross_attention(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:

@@ -70,11 +70,12 @@ class Model:
         return (not self.cfg.is_encoder_decoder
                 and transformer.supports_paged_cache(self.cfg))
 
-    def init_paged_caches(self, n_pages: int, page_size: int, dtype=None):
+    def init_paged_caches(self, n_pages: int, page_size: int, dtype=None,
+                          quantized: bool = False):
         if self.cfg.is_encoder_decoder:
             raise ValueError("paged KV cache is decoder-only")
         return transformer.init_paged_caches(self.cfg, n_pages, page_size,
-                                             dtype)
+                                             dtype, quantized)
 
     def paged_decode_step(self, params, caches, page_table, token, pos):
         return transformer.paged_decode_step(params, caches, page_table,

@@ -311,22 +311,42 @@ def supports_paged_cache(cfg: ArchConfig) -> bool:
 
 
 def init_paged_caches(cfg: ArchConfig, n_pages: int, page_size: int,
-                      dtype=None) -> Any:
+                      dtype=None, quantized: bool = False) -> Any:
     """Layer-stacked physical page pools: ``kv`` = (L, P, Hkv, psz, Dh) x2.
 
     Unlike :func:`init_caches` this allocates O(n_pages * page_size)
     tokens of KV *total*, not O(batch * max_len) — lanes borrow pages from
     the shared pool via their page tables.
+
+    ``quantized=True`` stores the pools as int8 and adds a ``kv_scale``
+    entry — (L, P, Hkv, psz) fp32 per-row scales for k and v.  The scale
+    arrays keep the page axis at position 1 (after the layer stack), so
+    every page-indexed treemap over the caches (COW copies, swap
+    gather/scatter) applies to scales unchanged.
     """
     if not supports_paged_cache(cfg):
         raise ValueError(
             f"arch {cfg.name!r} does not support the paged KV cache "
             "(needs a plain attention stack: no SSM/SWA/shared-attn)")
-    dtype = jnp.dtype(cfg.cache_dtype) if dtype is None else dtype
-    k, v = attn.init_paged_pool(n_pages, attn_config(cfg), page_size, dtype)
     l = cfg.n_layers
     stack = lambda a: jnp.broadcast_to(a, (l,) + a.shape).copy()
+    if quantized:
+        k, v = attn.init_paged_pool(n_pages, attn_config(cfg), page_size,
+                                    jnp.int8)
+        ks, vs = attn.init_paged_scales(n_pages, attn_config(cfg), page_size)
+        return {"kv": (stack(k), stack(v)),
+                "kv_scale": (stack(ks), stack(vs))}
+    dtype = jnp.dtype(cfg.cache_dtype) if dtype is None else dtype
+    k, v = attn.init_paged_pool(n_pages, attn_config(cfg), page_size, dtype)
     return {"kv": (stack(k), stack(v))}
+
+
+def _paged_out_caches(new_states: dict) -> dict:
+    """Scan outputs -> cache dict (kv, plus kv_scale for int8 pools)."""
+    out = {"kv": new_states["kv"]}
+    if "kv_scale" in new_states:
+        out["kv_scale"] = new_states["kv_scale"]
+    return out
 
 
 def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
@@ -346,8 +366,10 @@ def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
         x, = carry
         lp = scanned["params"]
         kp, vp = scanned["kv"]
-        h, kp, vp = attn.paged_decode(lp["attn"], _norm(cfg, lp, x, "norm1"),
-                                      kp, vp, page_table, pos, acfg)
+        scales = scanned.get("kv_scale")
+        h, kp, vp, scales = attn.paged_decode(
+            lp["attn"], _norm(cfg, lp, x, "norm1"),
+            kp, vp, page_table, pos, acfg, scales)
         x = x + h
         h2 = _norm(cfg, lp, x, "norm2")
         if kind == "attn_mlp":
@@ -355,17 +377,22 @@ def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
         else:
             out, _ = moe_mod.apply_moe(lp["moe"], h2, moe_config(cfg))
             x = x + out
-        return (x,), {"kv": (kp, vp)}
+        states = {"kv": (kp, vp)}
+        if scales is not None:
+            states["kv_scale"] = scales
+        return (x,), states
 
     scanned_in = {"params": _cast_tree(params["layers"], cfg),
                   "kv": caches["kv"]}
+    if "kv_scale" in caches:        # int8 pools: thread the scales too
+        scanned_in["kv_scale"] = caches["kv_scale"]
     (x,), new_states = jax.lax.scan(body, (x,), scanned_in)
     x = _norm(cfg, _cast_tree(
         {k: params[k] for k in params if k.startswith("final_norm")}, cfg),
         x, "final_norm")
     w = _compute(lm_head_weight(params, cfg), cfg)
     logits = (x[:, 0] @ w).astype(jnp.float32)
-    return logits, {"kv": new_states["kv"]}
+    return logits, _paged_out_caches(new_states)
 
 
 def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
@@ -392,10 +419,10 @@ def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
         x, = carry
         lp = scanned["params"]
         kp, vp = scanned["kv"]
-        h, kp, vp = attn.paged_prefill(lp["attn"],
-                                       _norm(cfg, lp, x, "norm1"),
-                                       kp, vp, page_table, start, kv_len,
-                                       acfg)
+        scales = scanned.get("kv_scale")
+        h, kp, vp, scales = attn.paged_prefill(
+            lp["attn"], _norm(cfg, lp, x, "norm1"),
+            kp, vp, page_table, start, kv_len, acfg, scales)
         x = x + h
         h2 = _norm(cfg, lp, x, "norm2")
         if kind == "attn_mlp":
@@ -403,10 +430,15 @@ def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
         else:
             out, _ = moe_mod.apply_moe(lp["moe"], h2, moe_config(cfg))
             x = x + out
-        return (x,), {"kv": (kp, vp)}
+        states = {"kv": (kp, vp)}
+        if scales is not None:
+            states["kv_scale"] = scales
+        return (x,), states
 
     scanned_in = {"params": _cast_tree(params["layers"], cfg),
                   "kv": caches["kv"]}
+    if "kv_scale" in caches:
+        scanned_in["kv_scale"] = caches["kv_scale"]
     (x,), new_states = jax.lax.scan(body, (x,), scanned_in)
     x = _norm(cfg, _cast_tree(
         {k: params[k] for k in params if k.startswith("final_norm")}, cfg),
@@ -415,7 +447,7 @@ def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
         x, logit_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
     w = _compute(lm_head_weight(params, cfg), cfg)
     logits = (x_last @ w).astype(jnp.float32)
-    return logits, {"kv": new_states["kv"]}
+    return logits, _paged_out_caches(new_states)
 
 
 def speculative_step(params: dict, caches: Any, page_table: jax.Array,
@@ -443,10 +475,10 @@ def speculative_step(params: dict, caches: Any, page_table: jax.Array,
         x, = carry
         lp = scanned["params"]
         kp, vp = scanned["kv"]
-        h, kp, vp = attn.paged_verify(lp["attn"],
-                                      _norm(cfg, lp, x, "norm1"),
-                                      kp, vp, page_table, start, kv_len,
-                                      acfg)
+        scales = scanned.get("kv_scale")
+        h, kp, vp, scales = attn.paged_verify(
+            lp["attn"], _norm(cfg, lp, x, "norm1"),
+            kp, vp, page_table, start, kv_len, acfg, scales)
         x = x + h
         h2 = _norm(cfg, lp, x, "norm2")
         if kind == "attn_mlp":
@@ -454,17 +486,22 @@ def speculative_step(params: dict, caches: Any, page_table: jax.Array,
         else:
             out, _ = moe_mod.apply_moe(lp["moe"], h2, moe_config(cfg))
             x = x + out
-        return (x,), {"kv": (kp, vp)}
+        states = {"kv": (kp, vp)}
+        if scales is not None:
+            states["kv_scale"] = scales
+        return (x,), states
 
     scanned_in = {"params": _cast_tree(params["layers"], cfg),
                   "kv": caches["kv"]}
+    if "kv_scale" in caches:
+        scanned_in["kv_scale"] = caches["kv_scale"]
     (x,), new_states = jax.lax.scan(body, (x,), scanned_in)
     x = _norm(cfg, _cast_tree(
         {k: params[k] for k in params if k.startswith("final_norm")}, cfg),
         x, "final_norm")
     w = _compute(lm_head_weight(params, cfg), cfg)
     logits = (x @ w).astype(jnp.float32)
-    return logits, {"kv": new_states["kv"]}
+    return logits, _paged_out_caches(new_states)
 
 
 def slice_draft_params(params: dict, cfg: ArchConfig,

@@ -107,7 +107,9 @@ class ServingEngine:
                  spec_k: int | None = None,
                  prefix_cache: bool = False,
                  prefix_min_match: int = 1,
-                 prefix_eviction: str = "lru"):
+                 prefix_eviction: str = "lru",
+                 kv_dtype: str = "fp",
+                 swap_compress: bool = False):
         self.model = model
         self.params = params
         self.n_lanes = n_lanes
@@ -117,7 +119,9 @@ class ServingEngine:
                                 n_pages=n_pages, page_size=page_size,
                                 prefix_cache=prefix_cache,
                                 prefix_min_match=prefix_min_match,
-                                prefix_eviction=prefix_eviction)
+                                prefix_eviction=prefix_eviction,
+                                kv_dtype=kv_dtype,
+                                swap_compress=swap_compress)
         if prefill_chunk is not None and self.kv.kind != "paged":
             raise ValueError(
                 "chunked prefill streams the prompt into the paged KV "

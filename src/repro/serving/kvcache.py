@@ -17,6 +17,14 @@ Page 0 of the pool is reserved as a *null page*: idle lanes decode with
 ``pos = 0`` and a zeroed page-table row, so their (discarded) KV writes
 land there and can never corrupt a live sequence.
 
+The paged pool can store K/V as **int8 pages** (``kv_dtype="int8"``):
+pool tensors are int8 with fp32 per-(page, head, slot)-row scales in
+``caches["kv_scale"]``, writes quantize on the way in (admit scatter,
+chunk scatter, decode append) and the attention kernels dequantize
+in-VMEM into the fp32 softmax accumulator.  Scale arrays keep the page
+axis at position 1, so page-indexed treemaps (COW copies, swap
+gather/scatter) cover them with no special cases.
+
 With ``prefix_cache=True`` the paged pool is additionally
 **content-addressed and refcounted**: every committed full page carries a
 rolling hash key (its token ids chained with the parent page's key), a
@@ -55,9 +63,52 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..distributed.compression import (dequantize_int8, quantize_int8,
+                                       quantize_int8_rows)
+
 NULL_PAGE = 0
 
 PREFIX_EVICTION_POLICIES = ("lru", "fifo")
+
+KV_DTYPES = ("fp", "int8")
+
+
+@dataclass
+class PackedTree:
+    """int8-quantized host copy of a cache pytree (one scale per leaf).
+
+    The lossy host-swap representation for *fp* pools
+    (``swap_compress=True``): each leaf is stored as an int8 array plus
+    one fp32 scale, quartering bf16 host bytes vs a raw fp32 copy and
+    halving them vs bf16.  int8 pools never need this — their page
+    payload is already int8 + per-row scales and round-trips bit-exactly.
+    """
+
+    payload: list[tuple[np.ndarray, float]]
+    treedef: Any
+
+    def host_bytes(self) -> int:
+        return sum(q.nbytes + 4 for q, _ in self.payload)
+
+
+def _pack_tree(tree) -> PackedTree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = []
+    for leaf in leaves:
+        q, s = quantize_int8(jnp.asarray(leaf))
+        payload.append((np.asarray(q), float(s)))
+    return PackedTree(payload, treedef)
+
+
+def _unpack_tree(packed: PackedTree):
+    leaves = [dequantize_int8(jnp.asarray(q), s)
+              for q, s in packed.payload]
+    return jax.tree_util.tree_unflatten(packed.treedef, leaves)
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(np.asarray(leaf).nbytes
+                   for leaf in jax.tree_util.tree_leaves(tree)))
 
 
 def chain_hash(parent: str, tokens: Sequence[int]) -> str:
@@ -99,10 +150,13 @@ class DenseKVCache:
 
     kind = "dense"
     prefix_cache = False
+    kv_dtype = "fp"
 
-    def __init__(self, model, n_lanes: int, max_len: int):
+    def __init__(self, model, n_lanes: int, max_len: int,
+                 swap_compress: bool = False):
         self.n_lanes = n_lanes
         self.max_len = max_len
+        self.swap_compress = swap_compress
         self.caches = model.init_caches(n_lanes, max_len)
 
     # -- engine interface ---------------------------------------------------
@@ -134,9 +188,13 @@ class DenseKVCache:
 
     def swap_out(self, lane: int) -> Any:
         handle = jax.tree.map(lambda a: np.asarray(a[:, lane]), self.caches)
+        if self.swap_compress:
+            return _pack_tree(handle)
         return handle
 
     def swap_in(self, lane: int, handle: Any) -> bool:
+        if isinstance(handle, PackedTree):
+            handle = _unpack_tree(handle)
         self.caches = jax.tree.map(
             lambda full, one: full.at[:, lane].set(
                 jnp.asarray(one).astype(full.dtype)),
@@ -151,16 +209,42 @@ class DenseKVCache:
         """Token capacity held in device memory (fixed for dense)."""
         return self.n_lanes * self.max_len
 
+    def pool_bytes(self) -> int:
+        """Device bytes held by the cache, from the actual array dtypes."""
+        return int(sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree_util.tree_leaves(self.caches)))
+
+    def kv_bytes_per_token(self) -> float:
+        return self.pool_bytes() / float(self.n_lanes * self.max_len)
+
+    def capacity_tokens(self) -> int:
+        return self.n_lanes * self.max_len
+
     def stats(self) -> dict:
-        return {"kind": self.kind, "cache_tokens": self.cache_tokens()}
+        return {"kind": self.kind, "kv_dtype": self.kv_dtype,
+                "cache_tokens": self.cache_tokens(),
+                "pool_bytes": self.pool_bytes(),
+                "kv_bytes_per_token": self.kv_bytes_per_token(),
+                "capacity_tokens": self.capacity_tokens()}
 
 
 @dataclass
 class PageHandle:
-    """Host-side copy of a swapped-out sequence's pages."""
+    """Host-side copy of a swapped-out sequence's pages.
+
+    ``chunks`` — pytree of np arrays (page axis at position 1) for raw
+    swaps; ``packed`` — the int8 :class:`PackedTree` form when the cache
+    compresses fp-pool swaps (exactly one of the two is set).
+    """
 
     chunks: Any          # pytree of np arrays, page axis at position 1
     n_blocks: int
+    packed: PackedTree | None = None
+
+    def host_bytes(self) -> int:
+        if self.packed is not None:
+            return self.packed.host_bytes()
+        return _tree_bytes(self.chunks)
 
 
 class PagedKVCache:
@@ -180,19 +264,31 @@ class PagedKVCache:
 
     def __init__(self, model, n_lanes: int, max_len: int, n_pages: int,
                  page_size: int = 16, prefix_cache: bool = False,
-                 prefix_min_match: int = 1, prefix_eviction: str = "lru"):
+                 prefix_min_match: int = 1, prefix_eviction: str = "lru",
+                 kv_dtype: str = "fp", swap_compress: bool = False):
         if not model.supports_paged_cache:
             raise ValueError(
                 f"arch {model.cfg.name!r} does not support the paged KV "
                 "cache; use cache='dense'")
         if n_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r} "
+                             f"(choose from {KV_DTYPES})")
         self.n_lanes = n_lanes
         self.max_len = max_len
         self.page_size = page_size
         self.n_pages = n_pages
+        self.kv_dtype = kv_dtype
+        self.quantized = kv_dtype == "int8"
+        # int8 pools swap their (already-compact) int8 payload losslessly;
+        # the opt-in flag additionally compresses *fp*-pool swaps (lossy:
+        # the bit-identical swap-continuation guarantee becomes int8-
+        # round-trip-identical)
+        self.swap_compress = swap_compress and not self.quantized
         self.max_blocks = math.ceil(max_len / page_size)
-        self.caches = model.init_paged_caches(n_pages, page_size)
+        self.caches = model.init_paged_caches(n_pages, page_size,
+                                              quantized=self.quantized)
         self.table = np.zeros((n_lanes, self.max_blocks), np.int32)
         self.n_blocks = [0] * n_lanes
         # page 0 is the null page (idle-lane write sink), never allocated
@@ -311,14 +407,29 @@ class PagedKVCache:
             return False
         arr = np.asarray(pages, np.int32)
 
-        def scatter(pool, dense):
+        def chunked(dense):
             # dense: (L, 1, Hkv, nblk*psz, D) -> (L, nblk, Hkv, psz, D)
             l, _, hkv, s, d = dense.shape
-            chunks = dense[:, 0].reshape(
+            return dense[:, 0].reshape(
                 l, hkv, nblk, self.page_size, d).transpose(0, 2, 1, 3, 4)
-            return pool.at[:, arr].set(chunks.astype(pool.dtype))
 
-        self.caches = jax.tree.map(scatter, self.caches, prefill_caches)
+        if self.quantized:
+            # quantize-on-admit: the monolithic prefill cache is fp, the
+            # pool is int8 + per-row scales
+            k8, v8 = self.caches["kv"]
+            ks, vs = self.caches["kv_scale"]
+            kq, ksc = quantize_int8_rows(chunked(prefill_caches["kv"][0]))
+            vq, vsc = quantize_int8_rows(chunked(prefill_caches["kv"][1]))
+            self.caches = {
+                "kv": (k8.at[:, arr].set(kq), v8.at[:, arr].set(vq)),
+                "kv_scale": (ks.at[:, arr].set(ksc),
+                             vs.at[:, arr].set(vsc)),
+            }
+        else:
+            self.caches = jax.tree.map(
+                lambda pool, dense: pool.at[:, arr].set(
+                    chunked(dense).astype(pool.dtype)),
+                self.caches, prefill_caches)
         self.table[lane, :nblk] = arr
         self.n_blocks[lane] = nblk
         return True
@@ -379,12 +490,23 @@ class PagedKVCache:
         self._free_lane(lane)
 
     def swap_out(self, lane: int) -> PageHandle:
+        """Copy the lane's pages to host memory and free them.
+
+        int8 pools swap their native payload (int8 pages + fp32 per-row
+        scales: already ~half the fp bytes, and the round trip is
+        bit-exact).  fp pools copy raw unless ``swap_compress`` is set,
+        which packs each leaf through :func:`quantize_int8` instead —
+        half the bf16 host bytes, int8-round-trip accuracy.
+        """
         nblk = self.n_blocks[lane]
         pages = np.asarray(self.table[lane, :nblk], np.int32)
         chunks = jax.tree.map(lambda pool: np.asarray(pool[:, pages]),
                               self.caches)
         self._free_lane(lane)
         self.swap_outs += 1
+        if self.swap_compress:
+            return PageHandle(chunks=None, n_blocks=nblk,
+                              packed=_pack_tree(chunks))
         return PageHandle(chunks=chunks, n_blocks=nblk)
 
     def swap_in(self, lane: int, handle: PageHandle) -> bool:
@@ -392,10 +514,12 @@ class PagedKVCache:
         if pages is None:
             return False
         arr = np.asarray(pages, np.int32)
+        chunks = handle.chunks if handle.packed is None \
+            else _unpack_tree(handle.packed)
         self.caches = jax.tree.map(
             lambda pool, chunk: pool.at[:, arr].set(
                 jnp.asarray(chunk).astype(pool.dtype)),
-            self.caches, handle.chunks)
+            self.caches, chunks)
         self.table[lane, :handle.n_blocks] = arr
         self.table[lane, handle.n_blocks:] = NULL_PAGE
         self.n_blocks[lane] = handle.n_blocks
@@ -559,12 +683,30 @@ class PagedKVCache:
         """Token capacity currently held by live sequences."""
         return self.used_pages * self.page_size
 
+    def pool_bytes(self) -> int:
+        """Device bytes held by the pool, from the *actual* leaf dtypes
+        (int8 pools count 1 byte/element plus their fp32 scale rows, not
+        the model compute dtype)."""
+        return int(sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree_util.tree_leaves(self.caches)))
+
+    def kv_bytes_per_token(self) -> float:
+        return self.pool_bytes() / float(self.n_pages * self.page_size)
+
+    def capacity_tokens(self) -> int:
+        """Allocatable token capacity (page 0 is the reserved null page)."""
+        return (self.n_pages - 1) * self.page_size
+
     def stats(self) -> dict:
         out = {"kind": self.kind, "page_size": self.page_size,
                "n_pages": self.n_pages, "used_pages": self.used_pages,
                "free_pages": self.free_pages,
                "cached_pages": self.cached_pages,
                "cache_tokens": self.cache_tokens(),
+               "kv_dtype": self.kv_dtype,
+               "pool_bytes": self.pool_bytes(),
+               "kv_bytes_per_token": self.kv_bytes_per_token(),
+               "capacity_tokens": self.capacity_tokens(),
                "swap_outs": self.swap_outs, "swap_ins": self.swap_ins}
         if self.prefix_cache:
             out["prefix"] = {
@@ -584,14 +726,20 @@ class PagedKVCache:
 def make_kv_cache(model, cache: str, n_lanes: int, max_len: int,
                   n_pages: int | None = None, page_size: int = 16,
                   prefix_cache: bool = False, prefix_min_match: int = 1,
-                  prefix_eviction: str = "lru"):
+                  prefix_eviction: str = "lru", kv_dtype: str = "fp",
+                  swap_compress: bool = False):
     """Build a KV-cache backend by name (``dense`` | ``paged``)."""
     if cache == "dense":
         if prefix_cache:
             raise ValueError(
                 "prefix caching shares pages of the paged pool; "
                 "use cache='paged'")
-        return DenseKVCache(model, n_lanes, max_len)
+        if kv_dtype != "fp":
+            raise ValueError(
+                "quantized KV storage is a paged-pool feature; "
+                "use cache='paged'")
+        return DenseKVCache(model, n_lanes, max_len,
+                            swap_compress=swap_compress)
     if cache == "paged":
         if n_pages is None:
             # default pool: enough for every lane at full length (parity
@@ -600,5 +748,6 @@ def make_kv_cache(model, cache: str, n_lanes: int, max_len: int,
         return PagedKVCache(model, n_lanes, max_len, n_pages, page_size,
                             prefix_cache=prefix_cache,
                             prefix_min_match=prefix_min_match,
-                            prefix_eviction=prefix_eviction)
+                            prefix_eviction=prefix_eviction,
+                            kv_dtype=kv_dtype, swap_compress=swap_compress)
     raise ValueError(f"unknown cache backend {cache!r}")

@@ -37,6 +37,17 @@ bit-identical under every candidate, so the region measures admissions
 freely and commits per its ``according`` criterion (default: the policy
 whose admissions leave the fewest uncached prompt tokens).
 
+Quantized paged KV adds a sixth (:meth:`DecodeAutoTuner.add_kv_precision`):
+one ``KVPrecision_{b}`` ``dynamic select`` per sequence-length bucket over
+the (kv precision × block_k) product — fp pages vs int8 pages with
+in-kernel dequant.  Unlike every other region family the candidates are
+*not* output-identical: int8 pages round each K/V row through a per-row
+scale, so the region's ``according`` couples latency to a quality guard
+(``min (time_per_token) .and. condition (agreement >= floor)``) — a
+quantized candidate may only win if its greedy tokens agree with the fp
+reference at or above the floor.  fp candidates report agreement 1.0 by
+construction, so the region can never commit to an empty pool.
+
 The serving gateway adds a fifth (:meth:`DecodeAutoTuner.add_gateway`):
 a single ``GatewayPolicy`` ``dynamic select`` over the gateway's
 concurrency product (pipeline depth × admission batch).  Candidates are
@@ -108,6 +119,10 @@ class DecodeAutoTuner:
         self.gateway_variants: list[tuple] = []
         self.gateway_param_names: tuple = ()
         self.gateway_region = None
+        self.kv_buckets: tuple = ()
+        self.kv_variants: list[tuple] = []
+        self.kv_param_names: tuple = ()
+        self.kv_regions: dict[int, object] = {}
         self.session.run("dynamic",
                          [f"DecodeBucket_{b}" for b in buckets])
 
@@ -181,6 +196,98 @@ class DecodeAutoTuner:
             self.spec_regions[b] = sel.region
             names.append(name)
         self.session.run("dynamic", names)
+
+    # -- kv-precision region (quantized paged KV) ----------------------------
+    def add_kv_precision(self, make_variant: Callable[..., Callable],
+                         precisions=("fp", "int8"), block_ks=(256,),
+                         buckets=LENGTH_BUCKETS,
+                         agreement_floor: float = 0.95) -> None:
+        """Declare the KV-precision tuning region family.
+
+        One ``KVPrecision_{b}`` ``dynamic select`` per sequence-length
+        bucket; alternatives are built by ``make_variant(bucket,
+        kv_dtype, block_k)`` — the (pool precision × dequant tile)
+        product.  ``fp`` candidates keep full-precision pages; ``int8``
+        candidates store int8 pages with per-row fp32 scales and
+        dequantize inside the attention kernel.
+
+        Quantization is *lossy*, so raw latency is the wrong criterion: a
+        fast candidate that corrupts the pages would still win.  Each
+        variant therefore reports ``{"time_per_token", "agreement"}`` —
+        agreement being the fraction of greedily decoded tokens matching
+        the fp reference on the calibration prompt — and the region
+        commits per ``min (time_per_token) .and. condition (agreement >=
+        floor)``: the fastest candidate *among those above the quality
+        floor*.  fp candidates agree with themselves by construction
+        (agreement 1.0), so the guarded pool is never empty.  Winners
+        persist in the session's record store and warm-load like every
+        other region (restart = zero re-tuning, no re-calibration).
+
+        ``precisions`` lists fp first so the first measured candidate
+        establishes the reference output for the bucket.
+        """
+        self.kv_buckets = tuple(buckets)
+        self.kv_param_names = ("kv_dtype", "block_k")
+        self.kv_variants = [(pr, bk) for pr in precisions for bk in block_ks]
+        according = (f"min (time_per_token) .and. "
+                     f"condition (agreement >= {agreement_floor})")
+        names = []
+        for b in buckets:
+            name = f"KVPrecision_{b}"
+            sel = self.session.autotune("dynamic", "select", name=name,
+                                        according=according)
+            for var in self.kv_variants:
+                label = ",".join(f"{k}={v}"
+                                 for k, v in zip(self.kv_param_names, var))
+                sel.alternative(name=label)(make_variant(b, *var))
+            self.kv_regions[b] = sel.region
+            names.append(name)
+        self.session.run("dynamic", names)
+
+    def kv_precision(self, kv_len: int, *args, **kwargs):
+        """Route one calibration measurement through the bucket's
+        KVPrecision region (measure-then-commit)."""
+        b = length_bucket(kv_len, self.kv_buckets)
+        return self.session.execute(f"KVPrecision_{b}", *args, **kwargs)
+
+    def kv_precision_committed(self, kv_len: int) -> bool:
+        """Has this bucket's KVPrecision region committed a winner?"""
+        b = length_bucket(kv_len, self.kv_buckets)
+        st = self.ctx.dynamic_state.get(f"KVPrecision_{b}")
+        return st is not None and st.committed is not None
+
+    def committed_kv_precision(self) -> dict[int, int | None]:
+        return {b: self.ctx.dynamic_state[f"KVPrecision_{b}"].committed
+                for b in self.kv_regions}
+
+    def committed_kv_precision_params(self) -> dict[int, dict | None]:
+        """Committed KV-precision winners as (kv_dtype, block_k)
+        assignments per sequence-length bucket."""
+        out: dict[int, dict | None] = {}
+        for b, idx in self.committed_kv_precision().items():
+            out[b] = None if idx is None \
+                else dict(zip(self.kv_param_names, self.kv_variants[idx]))
+        return out
+
+    def resolve_kv_dtype(self, default: str = "fp") -> str:
+        """Collapse the per-bucket winners into one pool dtype.
+
+        The pool's precision is structural — it is fixed when the cache
+        is built, before any request's length is known — so the
+        per-bucket winners are resolved by majority vote among committed
+        buckets.  Ties break toward ``int8`` (the capacity win is the
+        point of quantizing); no committed buckets → ``default``.
+        """
+        votes: dict[str, int] = {}
+        for params in self.committed_kv_precision_params().values():
+            if params is not None:
+                votes[params["kv_dtype"]] = votes.get(params["kv_dtype"],
+                                                      0) + 1
+        if not votes:
+            return default
+        best = max(votes.values())
+        winners = {d for d, n in votes.items() if n == best}
+        return "int8" if "int8" in winners else winners.pop()
 
     # -- prefix-policy region (prefix caching) -------------------------------
     def add_prefix_policy(self, make_policy: Callable[..., Callable],
