@@ -32,6 +32,14 @@ dispatch) and emits ``BENCH_serving.json``:
   Cells report ``capacity_tokens`` / ``max_concurrent_seqs`` / swap
   counts plus ``greedy_agreement`` — the int8 cell's token-level match
   against the fp cell's greedy outputs — both gated by ``compare.py``.
+* **mesh** cells — tensor-parallel paged serving over a forced-host
+  2x2 device mesh (4 CPU devices, KV-head axis sharded over the model
+  axis).  Each cell runs in a subprocess (``XLA_FLAGS`` must force the
+  device count before jax initializes) that serves the same greedy
+  workload unsharded and on the mesh; the cell reports the mesh run's
+  throughput plus ``greedy_agreement`` — its token-level match against
+  the unsharded outputs, which the sharded dispatch keeps bit-identical
+  (gated by ``compare.py``).
 * **shared_prefix** cells — every request carries the same long system
   prompt (the production shape: few-shot templates, multi-turn history)
   on the chunked paged engine, prefix cache off vs on.  The cached cell
@@ -184,6 +192,106 @@ def bench_kv_dtype(arch: str, kv_dtype: str, n_requests: int, n_lanes: int,
     }
     outputs = {r.rid: list(r.out_tokens) for r in finished}
     return row, outputs
+
+
+# runs in a child interpreter: XLA_FLAGS (forced host device count) only
+# takes effect before jax initializes, and the parent has already imported
+# jax by the time the mesh cells run
+_MESH_CHILD = r"""
+import json, sys, time
+import numpy as np
+
+cfg_in = json.loads(sys.argv[1])
+sys.path.insert(0, cfg_in["src"])
+import jax
+from repro.configs import get_arch
+from repro.distributed.sharding import make_serving_mesh
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+arch = cfg_in["arch"]
+acfg = get_arch(arch).reduced()
+model = build_model(acfg)
+params = model.init(jax.random.PRNGKey(cfg_in["seed"]))
+
+def run(mesh_spec):
+    engine = ServingEngine(model, params, n_lanes=cfg_in["lanes"],
+                           max_len=cfg_in["max_len"], cache="paged",
+                           page_size=cfg_in["page_size"],
+                           prefill_chunk=cfg_in["prefill_chunk"],
+                           mesh=make_serving_mesh(mesh_spec))
+    rng = np.random.default_rng(cfg_in["seed"])
+    t0 = time.time()
+    for rid in range(cfg_in["requests"]):
+        prompt = rng.integers(0, acfg.vocab_size,
+                              size=int(rng.integers(4, 12))).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt,
+                              max_new_tokens=cfg_in["max_new"]))
+    finished = engine.run(
+        max_steps=cfg_in["requests"] * (cfg_in["max_new"] + 6))
+    wall = time.time() - t0
+    s = engine.metrics.summary()
+    outs = {int(r.rid): [int(t) for t in r.out_tokens] for r in finished}
+    return engine, s, outs, wall, len(finished)
+
+_, _, ref_outs, _, _ = run(None)
+engine, s, outs, wall, n_fin = run(cfg_in["mesh"])
+match = total = 0
+for rid, ref in ref_outs.items():
+    got = outs.get(rid, [])
+    total += max(len(ref), len(got))
+    match += sum(a == b for a, b in zip(ref, got))
+print("MESH_ROW " + json.dumps({
+    "n_devices": len(jax.devices()),
+    "finished": n_fin,
+    "decode_steps": engine.steps,
+    "prefill_chunks": engine.prefill_chunks,
+    "generated_tokens": s["generated_tokens"],
+    "tokens_per_s": s["generated_tokens"] / wall if wall else 0.0,
+    "ttft_p50_s": s["ttft_s"]["p50"], "ttft_p99_s": s["ttft_s"]["p99"],
+    "itl_p50_s": s["itl_s"]["p50"], "itl_p99_s": s["itl_s"]["p99"],
+    "preemptions": s["preemptions"],
+    "greedy_agreement": match / total if total else 1.0,
+    "wall_s": wall,
+}))
+"""
+
+
+def bench_mesh(arch: str, mesh: str, n_requests: int, n_lanes: int,
+               max_len: int, max_new: int, page_size: int,
+               prefill_chunk: int, seed: int = 0) -> dict:
+    """Tensor-parallel paged serving on a forced-host device mesh.
+
+    The subprocess serves the identical greedy workload unsharded and on
+    the mesh, so ``greedy_agreement`` scores the sharded dispatch
+    against single-device truth (1.0 = bit-identical, the design
+    invariant the kernels' head-sharded shard_map + exact all-gather
+    guarantees)."""
+    import subprocess
+
+    devices = 1
+    for d in mesh.split("x"):
+        devices *= int(d)
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    child_cfg = {"src": env["PYTHONPATH"], "arch": arch, "mesh": mesh,
+                 "requests": n_requests, "lanes": n_lanes,
+                 "max_len": max_len, "max_new": max_new,
+                 "page_size": page_size, "prefill_chunk": prefill_chunk,
+                 "seed": seed}
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_CHILD, json.dumps(child_cfg)],
+        capture_output=True, text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mesh bench child failed:\n{proc.stderr}")
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("MESH_ROW "))
+    row = json.loads(line[len("MESH_ROW "):])
+    return {"arch": arch, "cache": "paged", "workload": "mesh",
+            "mesh": mesh, "prefill_chunk": prefill_chunk,
+            "n_lanes": n_lanes, "requests": n_requests, **row}
 
 
 def bench_mixed(arch: str, prefill_chunk: int | None, n_short: int,
@@ -436,6 +544,10 @@ def main() -> None:
     ap.add_argument("--spec-ks", type=int, nargs="+", default=[1, 4],
                     help="draft lengths for the speculative cells "
                          "(one cell per k)")
+    ap.add_argument("--mesh", default="2x2",
+                    help="device mesh 'RxC' (data x model) for the "
+                         "tensor-parallel cells; forced host devices, "
+                         "run in a subprocess")
     ap.add_argument("--prefix-len", type=int, default=64,
                     help="shared system-prompt length for the "
                          "shared_prefix cells (cache off vs on)")
@@ -506,6 +618,19 @@ def main() -> None:
                   f"{row['kv_bytes_per_token']:.0f} B/tok)  "
                   f"swaps {row['swap_outs']}  "
                   f"agree {row['greedy_agreement']:.0%}")
+        # tensor-parallel mesh: the sharded engine must reproduce the
+        # unsharded greedy outputs exactly (compare.py gates agreement).
+        # One run, not best-of: the subprocess pays jit compile twice
+        # (reference + mesh) and the cell's signal is agreement, not
+        # steady-state throughput.
+        row = bench_mesh(arch, args.mesh, args.requests, args.lanes,
+                         args.max_len, args.max_new, args.page_size,
+                         args.prefill_chunk)
+        results.append(row)
+        print(f"[bench_serving] {arch:14s} paged  mesh/{args.mesh:8s} "
+              f"{row['tokens_per_s']:8.1f} tok/s  "
+              f"{row['n_devices']} devices  "
+              f"agree {row['greedy_agreement']:.0%}")
         # mixed long/short workload: monolithic vs chunked prefill.  The
         # mixed max_len must fit long_len + max_new headroom.
         mixed_len = max(args.max_len, args.long_len + args.max_new + 2)
@@ -584,6 +709,7 @@ def main() -> None:
               "max_new": args.max_new, "page_size": args.page_size,
               "timeslice": args.timeslice,
               "kv_dtypes": ["fp", "int8"],
+              "mesh": args.mesh,
               "prefill_chunk": args.prefill_chunk,
               "long_len": args.long_len, "spec_ks": list(args.spec_ks),
               "prefix_len": args.prefix_len,

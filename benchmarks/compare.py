@@ -70,13 +70,14 @@ def cell_key(row: dict) -> tuple:
         row.get("spec_k"),
         row.get("prefix_cache"),
         row.get("kv_dtype"),
+        row.get("mesh"),
     )
 
 
 def _fmt_key(key: tuple) -> str:
-    if len(key) != 7:  # malformed row: show it verbatim, don't traceback
+    if len(key) != 8:  # malformed row: show it verbatim, don't traceback
         return repr(key)
-    arch, cache, workload, chunk, spec_k, prefix_cache, kv_dtype = key
+    arch, cache, workload, chunk, spec_k, prefix_cache, kv_dtype, mesh = key
     mode = f"/chunk={chunk}" if chunk else ""
     if spec_k is not None:
         mode += f"/k={spec_k}"
@@ -84,6 +85,8 @@ def _fmt_key(key: tuple) -> str:
         mode += f"/prefix={'on' if prefix_cache else 'off'}"
     if kv_dtype is not None:
         mode += f"/kv={kv_dtype}"
+    if mesh is not None:
+        mode += f"/mesh={mesh}"
     return f"{arch}:{cache}:{workload}{mode}"
 
 
@@ -204,6 +207,15 @@ def compare(
                 f"{name}: greedy agreement fell {b_agr:.1%} -> {c_agr:.1%} "
                 f"(limit {max_agreement_drop:.0%} drop) — quantized pages "
                 f"are corrupting outputs"
+            )
+        # mesh cells carry a stricter invariant than the kv-precision
+        # drop limit: sharded serving must be BIT-identical to the
+        # unsharded engine, so any divergence at all is a failure
+        if cur.get("workload") == "mesh" and c_agr is not None and c_agr < 1.0:
+            failures.append(
+                f"{name}: tensor-parallel outputs diverged from "
+                f"single-device greedy truth (agreement {c_agr:.1%}; the "
+                f"sharded dispatch must be bit-identical)"
             )
     return failures
 

@@ -43,6 +43,35 @@ def model_axis_size(mesh: Mesh) -> int:
     return mesh.shape["model"] if "model" in mesh.axis_names else 1
 
 
+def make_serving_mesh(spec: str | None) -> Mesh | None:
+    """Build the serving device mesh from an ``"RxC"`` flag value:
+    R devices on the ``data`` axis x C on the tensor-parallel ``model``
+    axis (``"1x4"`` = 4-way tensor parallelism).  ``None``/empty means no
+    mesh — the unsharded engine.  A 1x1 mesh is accepted and behaves
+    identically to no mesh (every dispatch site treats a 1-device model
+    axis as the unsharded path), which is what keeps 1-device-mesh runs
+    bit-identical and lets them reuse unsharded tuning winners."""
+    if not spec:
+        return None
+    parts = [p for p in str(spec).lower().split("x") if p]
+    try:
+        dims = tuple(int(p) for p in parts)
+    except ValueError:
+        dims = ()
+    if len(dims) != 2 or any(d < 1 for d in dims):
+        raise ValueError(
+            f"bad --mesh {spec!r}: expected 'RxC' (data x model), "
+            f"e.g. '1x4'")
+    r, c = dims
+    devices = jax.devices()
+    if r * c > len(devices):
+        raise ValueError(
+            f"--mesh {spec} needs {r * c} devices but only "
+            f"{len(devices)} are available (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N to emulate)")
+    return Mesh(np.array(devices[:r * c]).reshape(r, c), ("data", "model"))
+
+
 def _divisible(n: int, mesh: Mesh, axis: str = "model") -> bool:
     return axis in mesh.axis_names and n % mesh.shape[axis] == 0
 

@@ -48,6 +48,8 @@ Usage::
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import functools
 import time
 
 import jax
@@ -55,8 +57,72 @@ import numpy as np
 
 from .. import at
 from ..configs import get_arch
+from ..distributed.sharding import make_serving_mesh
 from ..models import build_model
 from ..serving import REDUCED_BUCKETS, Request, SamplingParams, ServingEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """The serve run shape as one typed object.
+
+    Replaces the 27-keyword ``serve(...)`` signature and the flat argparse
+    namespace as the source of truth: :meth:`from_args` builds it from the
+    CLI, :meth:`to_dict` stamps it verbatim into the serve report and the
+    bench payload config, so ``compare.py`` cell keys and the report both
+    derive from the same record.  ``mesh`` is the tensor-parallel device
+    mesh spec (``"RxC"``, data x model — e.g. ``"1x4"``; None = unsharded).
+    """
+
+    arch: str = "yi-6b"
+    n_requests: int = 8
+    n_lanes: int = 4
+    max_len: int = 96
+    prompt_len: int = 16
+    max_new: int = 12
+    seed: int = 0
+    autotune: bool = False
+    workdir: str = "."
+    cache: str = "dense"
+    n_pages: int | None = None
+    page_size: int = 16
+    timeslice: int | None = None
+    prefill_chunk: int | None = None
+    draft: bool = False
+    spec_k: int = 4
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    prefix_cache: bool = False
+    shared_prefix: int = 0
+    gateway: bool = False
+    port: int = 0
+    queue_limit: int = 64
+    policy_window: int = 2
+    slo_ttft_s: float = 30.0
+    slo_itl_s: float = 5.0
+    kv_dtype: str = "fp"
+    mesh: str | None = None
+
+    #: argparse dest -> field, for the names that differ
+    _ARG_FIELDS = {"requests": "n_requests", "lanes": "n_lanes",
+                   "pages": "n_pages", "slo_ttft": "slo_ttft_s",
+                   "slo_itl": "slo_itl_s"}
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace) -> "ServeConfig":
+        """Build from an argparse namespace (ignores unknown attributes,
+        keeps dataclass defaults for flags the parser doesn't expose)."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {}
+        for dest, value in vars(args).items():
+            name = cls._ARG_FIELDS.get(dest, dest)
+            if name in fields:
+                kw[name] = value
+        return cls(**kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 def _make_kv_precision_bench(model, page_size: int, lanes: int = 2,
@@ -138,7 +204,8 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                     prefill_chunk: int | None = None,
                     spec_k: int | None = None,
                     prefix_cache: bool = False,
-                    kv_precision: bool = False):
+                    kv_precision: bool = False,
+                    mesh=None, mesh_shape=None):
     """Per-bucket dynamic select over decode variants (repro.at session).
 
     Each candidate gets its own jit cache and publishes its block PPs
@@ -150,16 +217,30 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
     With chunked prefill the session also declares the prefill region
     family: one select per (prompt bucket × chunk size) over the
     ``flash_paged_prefill`` (block_q × block_k) tile space.
+
+    ``mesh`` (a device Mesh) is closed into every variant's jit so
+    tuner-routed calls run the same sharded computation as the engine's
+    committed steady state; ``mesh_shape`` keys the region names so each
+    mesh shape tunes and persists its own winners (a 1-device mesh keeps
+    the legacy names and warm-loads existing DBs unchanged).  The
+    KV-precision calibration bench stays unsharded: it measures on
+    throwaway pools as a cost proxy, and its greedy-agreement guard
+    compares like with like either way.
     """
     from ..tuning import DecodeAutoTuner
     session = at.AutoTuner(workdir)
+
+    def _jit_step(fn, **jit_kw):
+        if mesh is not None:
+            fn = functools.partial(fn, mesh=mesh)
+        return jax.jit(fn, **jit_kw)
 
     if cache == "paged":
         # the paged kernel's run-time PP is the split-K tile *within* a
         # page (page size itself is structural, fixed at pool build), so
         # the per-bucket space is block_k in {psz/2, psz}
         def make_decode(block_k):
-            decode_bk = jax.jit(model.paged_decode_step)
+            decode_bk = _jit_step(model.paged_decode_step)
 
             def variant(p, caches, table, token, pos, block_k=block_k):
                 at.publish("flash_paged_decode", block_k=block_k)
@@ -168,10 +249,11 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
 
         tuner = DecodeAutoTuner(session, make_decode,
                                 buckets=REDUCED_BUCKETS,
-                                block_ks=(max(1, page_size // 2), page_size))
+                                block_ks=(max(1, page_size // 2), page_size),
+                                mesh_shape=mesh_shape)
         if prefill_chunk is not None:
             def make_prefill(block_q, block_k):
-                prefill_jit = jax.jit(model.paged_prefill_step)
+                prefill_jit = _jit_step(model.paged_prefill_step)
 
                 def variant(p, caches, table, tokens, start, kv_len,
                             logit_idx, block_q=block_q, block_k=block_k):
@@ -196,7 +278,7 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
             # raw per-call latency would always elect the narrowest k, so
             # the region commits on throughput, not verify cost alone.
             def make_verify(k, block_q, block_k):
-                verify_jit = jax.jit(model.speculative_step)
+                verify_jit = _jit_step(model.speculative_step)
 
                 def variant(p, caches, table, tokens, start, kv_len,
                             k=k, block_q=block_q, block_k=block_k,
@@ -357,22 +439,30 @@ def _serve_gateway(engine, tuner, prompts, *, max_new: int, port: int,
     return engine.finished, report
 
 
-def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
-          max_len: int = 96, prompt_len: int = 16, max_new: int = 12,
-          seed: int = 0, autotune: bool = False, workdir: str = ".",
-          cache: str = "dense", n_pages: int | None = None,
-          page_size: int = 16, timeslice: int | None = None,
-          prefill_chunk: int | None = None, draft: bool = False,
-          spec_k: int = 4, temperature: float = 0.0, top_k: int = 0,
-          top_p: float = 1.0, prefix_cache: bool = False,
-          shared_prefix: int = 0, gateway: bool = False, port: int = 0,
-          queue_limit: int = 64, policy_window: int = 2,
-          slo_ttft_s: float = 30.0, slo_itl_s: float = 5.0,
-          kv_dtype: str = "fp") -> dict:
+def serve(**kwargs) -> dict:
+    """Back-compat wrapper: build a :class:`ServeConfig` from keyword
+    arguments and delegate to :func:`serve_config`."""
+    return serve_config(ServeConfig(**kwargs))
+
+
+def serve_config(scfg: ServeConfig) -> dict:
+    arch, n_requests, n_lanes = scfg.arch, scfg.n_requests, scfg.n_lanes
+    max_len, prompt_len, max_new = scfg.max_len, scfg.prompt_len, scfg.max_new
+    seed, autotune, workdir = scfg.seed, scfg.autotune, scfg.workdir
+    cache, n_pages, page_size = scfg.cache, scfg.n_pages, scfg.page_size
+    timeslice, prefill_chunk = scfg.timeslice, scfg.prefill_chunk
+    draft, spec_k = scfg.draft, scfg.spec_k
+    temperature, top_k, top_p = scfg.temperature, scfg.top_k, scfg.top_p
+    prefix_cache, shared_prefix = scfg.prefix_cache, scfg.shared_prefix
+    gateway, port, queue_limit = scfg.gateway, scfg.port, scfg.queue_limit
+    policy_window = scfg.policy_window
+    slo_ttft_s, slo_itl_s = scfg.slo_ttft_s, scfg.slo_itl_s
+    kv_dtype = scfg.kv_dtype
     if kv_dtype not in ("fp", "int8", "auto"):
         raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
     if kv_dtype == "auto" and not (cache == "paged" and autotune):
         raise ValueError("--kv-dtype auto needs --cache paged --autotune")
+    mesh = make_serving_mesh(scfg.mesh)
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -388,7 +478,8 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
                             prefill_chunk=prefill_chunk,
                             spec_k=spec_k if draft else None,
                             prefix_cache=prefix_cache,
-                            kv_precision=kv_dtype == "auto") \
+                            kv_precision=kv_dtype == "auto",
+                            mesh=mesh, mesh_shape=scfg.mesh) \
         if autotune else None
     resolved_kv = kv_dtype
     if kv_dtype == "auto":
@@ -409,7 +500,7 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
                            draft_params=draft_params,
                            spec_k=spec_k if draft else None,
                            prefix_cache=prefix_cache,
-                           kv_dtype=resolved_kv)
+                           kv_dtype=resolved_kv, mesh=mesh)
     rng = np.random.default_rng(seed)
     # shared_prefix > 0 prepends one common system prompt to every
     # request — the workload that makes the prefix cache earn its keep
@@ -445,6 +536,27 @@ def serve(arch: str = "yi-6b", n_requests: int = 8, n_lanes: int = 4,
                         "evictions": kvp.get("evictions", 0),
                         "cached_pages": kvp.get("cached_pages", 0)}
     return {
+        "config": scfg.to_dict(),
+        "mesh": scfg.mesh,
+        # rid -> greedy token ids, the bit-identity surface for the
+        # mesh-vs-unsharded correctness checks (CI + bench mesh cells)
+        "outputs": {int(r.rid): [int(t) for t in r.out_tokens]
+                    for r in finished},
+        # zero-re-tuning surface: a warm restart from a committed DB must
+        # report measurements == 0 / measured_regions [] — every region
+        # shows up in warm_regions instead (mesh-suffixed regions tune
+        # fresh the first time, then warm-load like the rest)
+        "autotune": ({
+            "executor_calls": tuner.session.executor_calls,
+            "measurements": sum(
+                len(st.tried)
+                for st in tuner.ctx.dynamic_state.values()),
+            "measured_regions": sorted(
+                name for name, st in tuner.ctx.dynamic_state.items()
+                if st.tried),
+            "warm_regions": sorted(
+                {name for _, name in tuner.session.warm_hits}),
+        } if tuner else None),
         "finished": len(finished), "requests": n_requests,
         "decode_steps": engine.steps,
         "generated_tokens": summary["generated_tokens"],
@@ -541,25 +653,17 @@ def main() -> None:
                          "only requests inside it)")
     ap.add_argument("--slo-itl", type=float, default=5.0,
                     help="gateway: p95 inter-token-latency SLO in seconds")
+    ap.add_argument("--mesh", default=None,
+                    help="tensor-parallel device mesh 'RxC' (data x "
+                         "model), e.g. '1x4': paged KV pools and "
+                         "attention heads shard over the model axis; "
+                         "'1x1' is bit-identical to no mesh")
     ap.add_argument("--autotune", action="store_true",
                     help="run-time AT over decode buckets (repro.at)")
     ap.add_argument("--workdir", default=".",
                     help="AT session workdir (param files + record store)")
     args = ap.parse_args()
-    out = serve(arch=args.arch, n_requests=args.requests,
-                n_lanes=args.lanes, max_len=args.max_len,
-                max_new=args.max_new, autotune=args.autotune,
-                workdir=args.workdir, cache=args.cache,
-                n_pages=args.pages, page_size=args.page_size,
-                timeslice=args.timeslice, prefill_chunk=args.prefill_chunk,
-                draft=args.draft, spec_k=args.spec_k,
-                temperature=args.temperature, top_k=args.top_k,
-                top_p=args.top_p, prefix_cache=args.prefix_cache,
-                shared_prefix=args.shared_prefix, gateway=args.gateway,
-                port=args.port, queue_limit=args.queue_limit,
-                policy_window=args.policy_window,
-                slo_ttft_s=args.slo_ttft, slo_itl_s=args.slo_itl,
-                kv_dtype=args.kv_dtype)
+    out = serve_config(ServeConfig.from_args(args))
     def fmt(x, spec):
         return format(x, spec) if x is not None else "n/a"
 

@@ -69,8 +69,11 @@ def _project_qkv(p: dict, x: jax.Array, cfg: AttnConfig, positions):
 
 
 def full(p: dict, x: jax.Array, cfg: AttnConfig,
-         positions: jax.Array | None = None, return_cache: bool = False):
-    """Whole-sequence attention.  x: (B, S, d)."""
+         positions: jax.Array | None = None, return_cache: bool = False,
+         mesh=None):
+    """Whole-sequence attention.  x: (B, S, d).  ``mesh`` routes long
+    causal sequences through the ring sequence-parallel tail (see
+    :func:`repro.kernels.ops.attention`)."""
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s)
@@ -78,7 +81,8 @@ def full(p: dict, x: jax.Array, cfg: AttnConfig,
     q = constrain(q, "heads")
     k = constrain(k, "kv_heads")
     v = constrain(v, "kv_heads")
-    out = ops.attention(q, k, v, causal=cfg.causal, window=cfg.window)
+    out = ops.attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                        mesh=mesh)
     out = constrain(out, "heads")
     out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
     out = out @ p["wo"]
@@ -116,7 +120,7 @@ def decode(p: dict, x: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
 
 def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
                  v_pool: jax.Array, page_table: jax.Array,
-                 pos: jax.Array, cfg: AttnConfig, scales=None):
+                 pos: jax.Array, cfg: AttnConfig, scales=None, mesh=None):
     """One-token decode against a paged KV cache.
 
     x: (B, 1, d); pools (P, Hkv, psz, Dh) are shared by every sequence,
@@ -131,6 +135,12 @@ def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
     token's KV is quantized on the way in and attention dequantizes
     in-kernel.  Returns ``(out, k_pool, v_pool, scales)``; ``scales`` is
     None on the fp path.
+
+    ``mesh``: a mesh with a multi-device ``model`` axis runs the
+    attention op head-sharded (the op's output is gathered back to
+    replicated before the output projection, so results stay bit
+    identical to the unsharded path — see
+    :func:`repro.kernels.ops.paged_decode`).
     """
     assert cfg.window is None, "paged decode does not support SWA archs"
     b, one, _ = x.shape
@@ -162,8 +172,8 @@ def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
         v_pool = v_pool.at[pidx, hidx, sidx, didx].set(
             v[:, :, :1, :].astype(v_pool.dtype))
     kv_len = (pos + 1).astype(jnp.int32)
-    out = ops.paged_decode_attention(q, k_pool, v_pool, page_table, kv_len,
-                                     k_scale=k_scale, v_scale=v_scale)
+    pools = ops.PagedPools(k_pool, v_pool, k_scale, v_scale)
+    out = ops.paged_decode(q, pools, page_table, kv_len, mesh=mesh)
     out = out.transpose(0, 2, 1, 3).reshape(b, one, cfg.n_heads * cfg.d_head)
     return out @ p["wo"], k_pool, v_pool, scales
 
@@ -171,7 +181,7 @@ def paged_decode(p: dict, x: jax.Array, k_pool: jax.Array,
 def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
                   v_pool: jax.Array, page_table: jax.Array,
                   start: jax.Array, kv_len: jax.Array, cfg: AttnConfig,
-                  scales=None):
+                  scales=None, mesh=None):
     """One prompt *chunk* against a paged KV cache.
 
     x: (B, C, d) — chunk tokens whose first token sits at absolute
@@ -187,9 +197,8 @@ def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
     q, k_pool, v_pool, scales = _paged_chunk_scatter(
         p, x, k_pool, v_pool, page_table, start, kv_len, cfg, scales)
     k_scale, v_scale = scales if scales is not None else (None, None)
-    out = ops.paged_prefill_attention(q, k_pool, v_pool, page_table,
-                                      start, kv_len,
-                                      k_scale=k_scale, v_scale=v_scale)
+    pools = ops.PagedPools(k_pool, v_pool, k_scale, v_scale)
+    out = ops.paged_prefill(q, pools, page_table, start, kv_len, mesh=mesh)
     b, c, _ = x.shape
     out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
     return out @ p["wo"], k_pool, v_pool, scales
@@ -198,7 +207,7 @@ def paged_prefill(p: dict, x: jax.Array, k_pool: jax.Array,
 def paged_verify(p: dict, x: jax.Array, k_pool: jax.Array,
                  v_pool: jax.Array, page_table: jax.Array,
                  start: jax.Array, kv_len: jax.Array, cfg: AttnConfig,
-                 scales=None):
+                 scales=None, mesh=None):
     """Speculative-verify attention: one *candidate* chunk against a paged
     KV cache.
 
@@ -216,9 +225,8 @@ def paged_verify(p: dict, x: jax.Array, k_pool: jax.Array,
     q, k_pool, v_pool, scales = _paged_chunk_scatter(
         p, x, k_pool, v_pool, page_table, start, kv_len, cfg, scales)
     k_scale, v_scale = scales if scales is not None else (None, None)
-    out = ops.paged_verify_attention(q, k_pool, v_pool, page_table,
-                                     start, kv_len,
-                                     k_scale=k_scale, v_scale=v_scale)
+    pools = ops.PagedPools(k_pool, v_pool, k_scale, v_scale)
+    out = ops.paged_verify(q, pools, page_table, start, kv_len, mesh=mesh)
     b, c, _ = x.shape
     out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.d_head)
     return out @ p["wo"], k_pool, v_pool, scales

@@ -43,12 +43,12 @@ class Model:
                                    frontend_embeds)
 
     def prefill(self, params, tokens, frontend_embeds=None,
-                max_len=None):
+                max_len=None, mesh=None):
         if self.cfg.is_encoder_decoder:
             return encdec.prefill(params, tokens, self.cfg, frontend_embeds,
                                   max_len)
         return transformer.prefill(params, tokens, self.cfg,
-                                   frontend_embeds, max_len)
+                                   frontend_embeds, max_len, mesh=mesh)
 
     def decode_step(self, params, caches, token, pos):
         if self.cfg.is_encoder_decoder:
@@ -77,22 +77,24 @@ class Model:
         return transformer.init_paged_caches(self.cfg, n_pages, page_size,
                                              dtype, quantized)
 
-    def paged_decode_step(self, params, caches, page_table, token, pos):
+    def paged_decode_step(self, params, caches, page_table, token, pos,
+                          mesh=None):
         return transformer.paged_decode_step(params, caches, page_table,
-                                             token, pos, self.cfg)
+                                             token, pos, self.cfg, mesh=mesh)
 
     def paged_prefill_step(self, params, caches, page_table, tokens,
-                           start, kv_len, logit_idx):
+                           start, kv_len, logit_idx, mesh=None):
         return transformer.paged_prefill_step(params, caches, page_table,
                                               tokens, start, kv_len,
-                                              logit_idx, self.cfg)
+                                              logit_idx, self.cfg, mesh=mesh)
 
     # -- speculative decoding (serving) ------------------------------------
     def speculative_step(self, params, caches, page_table, tokens,
-                         start, kv_len):
+                         start, kv_len, mesh=None):
         """Verify one candidate chunk per lane; full (B, C, V) logits."""
         return transformer.speculative_step(params, caches, page_table,
-                                            tokens, start, kv_len, self.cfg)
+                                            tokens, start, kv_len, self.cfg,
+                                            mesh=mesh)
 
     def draft_model(self, depth_frac: float = 0.5,
                     width_frac: float = 1.0) -> "Model":

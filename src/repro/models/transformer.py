@@ -350,7 +350,8 @@ def _paged_out_caches(new_states: dict) -> dict:
 
 
 def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
-                      token: jax.Array, pos: jax.Array, cfg: ArchConfig):
+                      token: jax.Array, pos: jax.Array, cfg: ArchConfig,
+                      mesh=None):
     """One decode step over paged caches.
 
     token (B, 1) int32, pos (B,) int32, page_table (B, nblk) int32 shared
@@ -369,7 +370,7 @@ def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
         scales = scanned.get("kv_scale")
         h, kp, vp, scales = attn.paged_decode(
             lp["attn"], _norm(cfg, lp, x, "norm1"),
-            kp, vp, page_table, pos, acfg, scales)
+            kp, vp, page_table, pos, acfg, scales, mesh=mesh)
         x = x + h
         h2 = _norm(cfg, lp, x, "norm2")
         if kind == "attn_mlp":
@@ -398,7 +399,7 @@ def paged_decode_step(params: dict, caches: Any, page_table: jax.Array,
 def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
                        tokens: jax.Array, start: jax.Array,
                        kv_len: jax.Array, logit_idx: jax.Array,
-                       cfg: ArchConfig):
+                       cfg: ArchConfig, mesh=None):
     """One prompt *chunk* of prefill over paged caches.
 
     tokens (B, C) int32 — a fixed-size chunk (pad the ragged tail; padded
@@ -422,7 +423,7 @@ def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
         scales = scanned.get("kv_scale")
         h, kp, vp, scales = attn.paged_prefill(
             lp["attn"], _norm(cfg, lp, x, "norm1"),
-            kp, vp, page_table, start, kv_len, acfg, scales)
+            kp, vp, page_table, start, kv_len, acfg, scales, mesh=mesh)
         x = x + h
         h2 = _norm(cfg, lp, x, "norm2")
         if kind == "attn_mlp":
@@ -452,7 +453,7 @@ def paged_prefill_step(params: dict, caches: Any, page_table: jax.Array,
 
 def speculative_step(params: dict, caches: Any, page_table: jax.Array,
                      tokens: jax.Array, start: jax.Array,
-                     kv_len: jax.Array, cfg: ArchConfig):
+                     kv_len: jax.Array, cfg: ArchConfig, mesh=None):
     """Speculative *verify* step: score every chunk position in one call.
 
     tokens (B, C) int32 — ``[last committed token, draft_1 .. draft_k]``
@@ -478,7 +479,7 @@ def speculative_step(params: dict, caches: Any, page_table: jax.Array,
         scales = scanned.get("kv_scale")
         h, kp, vp, scales = attn.paged_verify(
             lp["attn"], _norm(cfg, lp, x, "norm1"),
-            kp, vp, page_table, start, kv_len, acfg, scales)
+            kp, vp, page_table, start, kv_len, acfg, scales, mesh=mesh)
         x = x + h
         h2 = _norm(cfg, lp, x, "norm2")
         if kind == "attn_mlp":
@@ -613,7 +614,7 @@ def decode_step(params: dict, caches: Any, token: jax.Array,
 
 def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
             frontend_embeds: jax.Array | None = None,
-            max_len: int | None = None):
+            max_len: int | None = None, mesh=None):
     """Forward over the prompt; returns (last-token logits, caches).
 
     Attention layers collect KV for the whole prompt; SSM layers collect the
@@ -621,7 +622,9 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
     (ring-buffer layout, slot = pos % W).  ``max_len`` sizes the returned
     KV caches (>= prompt length) so decode steps have room to append —
     without it the cache is exactly prompt-sized and the *next* token's KV
-    would be dropped.
+    would be dropped.  ``mesh`` routes long causal prompts through the
+    ring sequence-parallel attention tail (see
+    :func:`repro.kernels.ops.attention`).
     """
     x = embed_tokens(params, tokens, cfg, frontend_embeds)
     b, s, _ = x.shape
@@ -653,7 +656,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
         ys = {}
         if kind in ("attn_mlp", "attn_moe"):
             h, (k, v) = attn.full(lp["attn"], _norm(cfg, lp, x, "norm1"),
-                                  acfg, return_cache=True)
+                                  acfg, return_cache=True, mesh=mesh)
             ys["kv"] = kv_out(k, v)
             x = x + h
             h2 = _norm(cfg, lp, x, "norm2")

@@ -47,6 +47,7 @@ output is bit-identical to plain greedy decode.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -109,19 +110,28 @@ class ServingEngine:
                  prefix_min_match: int = 1,
                  prefix_eviction: str = "lru",
                  kv_dtype: str = "fp",
-                 swap_compress: bool = False):
+                 swap_compress: bool = False,
+                 mesh=None):
         self.model = model
         self.params = params
         self.n_lanes = n_lanes
         self.max_len = max_len
         self.eos_id = eos_id
+        # tensor-parallel serving: a mesh with a multi-device "model" axis
+        # shards the page pools' KV-head axis across devices and runs the
+        # paged attention ops under shard_map (kernels/ops.py); the mesh
+        # is closed over the jit'd step functions below (it is a static
+        # hashable, not a traced argument).  A 1-device mesh (or None)
+        # takes the unsharded code paths unchanged.
+        self.mesh = mesh
         self.kv = make_kv_cache(model, cache, n_lanes, max_len,
                                 n_pages=n_pages, page_size=page_size,
                                 prefix_cache=prefix_cache,
                                 prefix_min_match=prefix_min_match,
                                 prefix_eviction=prefix_eviction,
                                 kv_dtype=kv_dtype,
-                                swap_compress=swap_compress)
+                                swap_compress=swap_compress,
+                                mesh=mesh)
         if prefill_chunk is not None and self.kv.kind != "paged":
             raise ValueError(
                 "chunked prefill streams the prompt into the paged KV "
@@ -135,11 +145,17 @@ class ServingEngine:
         self.metrics = ServingMetrics()
         step_fn = model.paged_decode_step if self.kv.kind == "paged" \
             else model.decode_step
+        if mesh is not None and self.kv.kind == "paged":
+            step_fn = functools.partial(step_fn, mesh=mesh)
         self._decode = decode_fn or jax.jit(step_fn)
+        prefill_base = model.prefill if mesh is None \
+            else functools.partial(model.prefill, mesh=mesh)
         self._prefill = prefill_fn or jax.jit(
-            model.prefill, static_argnums=(3,))
+            prefill_base, static_argnums=(3,))
         if prefill_chunk is not None:
-            self._prefill_step = jax.jit(model.paged_prefill_step)
+            chunk_fn = model.paged_prefill_step if mesh is None \
+                else functools.partial(model.paged_prefill_step, mesh=mesh)
+            self._prefill_step = jax.jit(chunk_fn)
         # -- speculative decoding ------------------------------------------
         self.spec_k = spec_k
         self.draft_model = draft_model
@@ -163,7 +179,9 @@ class ServingEngine:
             # the draft's KV never needs to swap with the sequence
             self.draft_kv = DenseKVCache(draft_model, n_lanes, max_len)
             self.draft_pos = [0] * n_lanes   # tokens in the draft's cache
-            self._verify = jax.jit(model.speculative_step)
+            verify_fn = model.speculative_step if mesh is None \
+                else functools.partial(model.speculative_step, mesh=mesh)
+            self._verify = jax.jit(verify_fn)
             self._draft_decode = jax.jit(draft_model.decode_step)
             self._draft_prefill = jax.jit(draft_model.prefill,
                                           static_argnums=(3,))

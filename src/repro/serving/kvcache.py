@@ -73,6 +73,31 @@ PREFIX_EVICTION_POLICIES = ("lru", "fifo")
 KV_DTYPES = ("fp", "int8")
 
 
+def _mesh_model_axis(mesh) -> int:
+    """Size of the mesh's tensor-parallel ``model`` axis (1 == no mesh /
+    no model axis / 1-device axis — all take the unsharded path)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+def _pool_shardings(caches: dict, mesh):
+    """NamedShardings placing the KV-head axis of every stacked pool leaf
+    over the mesh's ``model`` axis: pools are (L, P, Hkv, psz, D), scales
+    (L, P, Hkv, psz) — head axis 2 in both; everything else replicated."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    def spec(leaf):
+        if leaf.ndim == 5:          # (L, P, Hkv, psz, D) pool
+            return NamedSharding(mesh, P(None, None, "model", None, None))
+        if leaf.ndim == 4:          # (L, P, Hkv, psz) scale
+            return NamedSharding(mesh, P(None, None, "model", None))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(spec, caches)
+
+
 @dataclass
 class PackedTree:
     """int8-quantized host copy of a cache pytree (one scale per leaf).
@@ -265,7 +290,8 @@ class PagedKVCache:
     def __init__(self, model, n_lanes: int, max_len: int, n_pages: int,
                  page_size: int = 16, prefix_cache: bool = False,
                  prefix_min_match: int = 1, prefix_eviction: str = "lru",
-                 kv_dtype: str = "fp", swap_compress: bool = False):
+                 kv_dtype: str = "fp", swap_compress: bool = False,
+                 mesh=None):
         if not model.supports_paged_cache:
             raise ValueError(
                 f"arch {model.cfg.name!r} does not support the paged KV "
@@ -275,6 +301,17 @@ class PagedKVCache:
         if kv_dtype not in KV_DTYPES:
             raise ValueError(f"unknown kv_dtype {kv_dtype!r} "
                              f"(choose from {KV_DTYPES})")
+        self.mesh = mesh
+        model_axis = _mesh_model_axis(mesh)
+        if model_axis > 1:
+            hkv, h = model.cfg.n_kv_heads, model.cfg.n_heads
+            if hkv % model_axis or h % model_axis:
+                raise ValueError(
+                    f"tensor-parallel paged serving shards the KV-head "
+                    f"axis: arch {model.cfg.name!r} has kv_heads={hkv} "
+                    f"(q heads {h}), not divisible by the mesh's 'model' "
+                    f"axis of size {model_axis} — choose a mesh whose "
+                    f"model axis divides the head counts, or drop --mesh")
         self.n_lanes = n_lanes
         self.max_len = max_len
         self.page_size = page_size
@@ -289,6 +326,12 @@ class PagedKVCache:
         self.max_blocks = math.ceil(max_len / page_size)
         self.caches = model.init_paged_caches(n_pages, page_size,
                                               quantized=self.quantized)
+        if model_axis > 1:
+            # place each device's KV-head slice of every pool on its own
+            # device up front: the per-layer stacked pools are
+            # (L, P, Hkv, psz, D) / scales (L, P, Hkv, psz), head axis 2
+            self.caches = jax.device_put(
+                self.caches, _pool_shardings(self.caches, mesh))
         self.table = np.zeros((n_lanes, self.max_blocks), np.int32)
         self.n_blocks = [0] * n_lanes
         # page 0 is the null page (idle-lane write sink), never allocated
@@ -727,7 +770,7 @@ def make_kv_cache(model, cache: str, n_lanes: int, max_len: int,
                   n_pages: int | None = None, page_size: int = 16,
                   prefix_cache: bool = False, prefix_min_match: int = 1,
                   prefix_eviction: str = "lru", kv_dtype: str = "fp",
-                  swap_compress: bool = False):
+                  swap_compress: bool = False, mesh=None):
     """Build a KV-cache backend by name (``dense`` | ``paged``)."""
     if cache == "dense":
         if prefix_cache:
@@ -738,6 +781,10 @@ def make_kv_cache(model, cache: str, n_lanes: int, max_len: int,
             raise ValueError(
                 "quantized KV storage is a paged-pool feature; "
                 "use cache='paged'")
+        if _mesh_model_axis(mesh) > 1:
+            raise ValueError(
+                "tensor-parallel serving shards the paged page pools; "
+                "use cache='paged' with --mesh")
         return DenseKVCache(model, n_lanes, max_len,
                             swap_compress=swap_compress)
     if cache == "paged":
@@ -749,5 +796,6 @@ def make_kv_cache(model, cache: str, n_lanes: int, max_len: int,
                             prefix_cache=prefix_cache,
                             prefix_min_match=prefix_min_match,
                             prefix_eviction=prefix_eviction,
-                            kv_dtype=kv_dtype, swap_compress=swap_compress)
+                            kv_dtype=kv_dtype, swap_compress=swap_compress,
+                            mesh=mesh)
     raise ValueError(f"unknown cache backend {cache!r}")

@@ -76,6 +76,128 @@ from ..serving.engine import length_bucket
 DEFAULT_BLOCK_KS = (256, 512, 1024)
 
 
+# -- region naming ----------------------------------------------------------
+#
+# Canonical region-name builder.  With no mesh (or any 1-device mesh) the
+# canonical names ARE the historical ad-hoc strings — which is what lets
+# pre-mesh tuning DBs warm-load unchanged — while a multi-device mesh
+# appends a ``_mesh{R}x{C}`` suffix so winners are tuned and persisted per
+# mesh shape (arXiv 1309.1894: a winner is only valid in the environment
+# that measured it, and the parallelism degree is part of the environment).
+
+_REGION_FORMATS = {
+    "decode": "DecodeBucket_{bucket}",
+    "prefill": "PrefillBucket_{bucket}_c{chunk}",
+    "spec": "SpecBucket_{bucket}",
+    "kv_precision": "KVPrecision_{bucket}",
+    "prefix": "PrefixPolicy",
+    "gateway": "GatewayPolicy",
+}
+
+#: Legacy name prefix -> canonical kind.  Pre-mesh tuning DBs recorded
+#: exactly these strings; :func:`region_key` still emits them whenever the
+#: mesh has one device, so existing records warm-load with zero re-tuning.
+LEGACY_REGION_ALIASES = {
+    "DecodeBucket": "decode",
+    "PrefillBucket": "prefill",
+    "SpecBucket": "spec",
+    "KVPrecision": "kv_precision",
+    "PrefixPolicy": "prefix",
+    "GatewayPolicy": "gateway",
+}
+
+
+def normalize_mesh_shape(mesh_shape) -> tuple[int, ...]:
+    """Normalize a mesh shape given as ``None``, an ``"RxC"`` string, an
+    int, or an iterable of ints into a tuple of ints (``()`` == no mesh)."""
+    if mesh_shape is None:
+        return ()
+    if isinstance(mesh_shape, str):
+        parts = [p for p in mesh_shape.lower().split("x") if p]
+        try:
+            return tuple(int(p) for p in parts)
+        except ValueError:
+            raise ValueError(
+                f"bad mesh shape {mesh_shape!r}: expected 'RxC' like '1x4'"
+            ) from None
+    if isinstance(mesh_shape, int):
+        return (mesh_shape,)
+    return tuple(int(d) for d in mesh_shape)
+
+
+def mesh_suffix(mesh_shape) -> str:
+    """The region-name suffix for a mesh shape: empty for no mesh or any
+    1-device mesh (those runs are bit-identical to the unsharded engine,
+    so they share its winners), ``_mesh{R}x{C}`` otherwise."""
+    shape = normalize_mesh_shape(mesh_shape)
+    n = 1
+    for d in shape:
+        n *= d
+    if n <= 1:
+        return ""
+    return "_mesh" + "x".join(str(d) for d in shape)
+
+
+def region_key(kind: str, bucket: int | None = None, *,
+               chunk: int | None = None, mesh_shape=None) -> str:
+    """Build the canonical region name for one tuning region.
+
+    ``kind`` is one of ``decode`` / ``prefill`` / ``spec`` /
+    ``kv_precision`` / ``prefix`` / ``gateway``; bucketed kinds require
+    ``bucket`` and prefill additionally requires ``chunk``.  The
+    ``mesh_shape`` axis keys winners per execution environment — a
+    1-device shape collapses to the legacy (unsuffixed) name.
+    """
+    fmt = _REGION_FORMATS.get(kind)
+    if fmt is None:
+        raise ValueError(
+            f"unknown region kind {kind!r}: expected one of "
+            f"{sorted(_REGION_FORMATS)}")
+    if "{bucket}" in fmt and bucket is None:
+        raise ValueError(f"{kind!r} regions are bucketed: pass bucket")
+    if "{chunk}" in fmt and chunk is None:
+        raise ValueError(f"{kind!r} regions need chunk= (one region per "
+                         f"bucket x chunk size)")
+    return fmt.format(bucket=bucket, chunk=chunk) + mesh_suffix(mesh_shape)
+
+
+def parse_region(name: str) -> tuple[str, int | None, int | None,
+                                     tuple[int, ...]]:
+    """Split a region name into ``(kind, bucket, chunk, mesh_shape)``.
+
+    Understands both legacy (unsuffixed) and mesh-suffixed names via
+    :data:`LEGACY_REGION_ALIASES`.  Raises ``KeyError`` for names no
+    alias matches.
+    """
+    base, _, mesh = name.partition("_mesh")
+    shape = normalize_mesh_shape(mesh) if mesh else ()
+    for prefix, kind in LEGACY_REGION_ALIASES.items():
+        if base == prefix:
+            return kind, None, None, shape
+        if base.startswith(prefix + "_"):
+            rest = base[len(prefix) + 1:]
+            try:
+                if kind == "prefill":
+                    b, _, c = rest.partition("_c")
+                    return kind, int(b), int(c), shape
+                return kind, int(rest), None, shape
+            except ValueError:
+                break
+    raise KeyError(name)
+
+
+def resolve_region(name: str) -> str:
+    """Canonicalize a possibly-legacy region name through the alias
+    table.  Today every legacy name is already canonical (that identity
+    is what keeps old tuning DBs warm-loading), so unknown names pass
+    through unchanged rather than erroring."""
+    try:
+        kind, bucket, chunk, shape = parse_region(name)
+    except (KeyError, ValueError):
+        return name
+    return region_key(kind, bucket, chunk=chunk, mesh_shape=shape or None)
+
+
 class DecodeAutoTuner:
     """Per-bucket dynamic select over decode variants.
 
@@ -88,17 +210,21 @@ class DecodeAutoTuner:
                  make_decode: Callable[..., Callable],
                  buckets=LENGTH_BUCKETS,
                  block_ks=DEFAULT_BLOCK_KS,
-                 page_sizes=None):
+                 page_sizes=None,
+                 mesh_shape=None):
         self.session = at.AutoTuner.for_context(session)
         self.ctx = self.session.ctx
         self.buckets = buckets
+        # winners are keyed per mesh shape (1-device shapes collapse to
+        # the legacy names, so unsharded winners keep warm-loading)
+        self.mesh_shape = normalize_mesh_shape(mesh_shape)
         self.param_names = ("block_k",) if page_sizes is None \
             else ("block_k", "page_size")
         self.variants = [(bk,) for bk in block_ks] if page_sizes is None \
             else [(bk, ps) for bk in block_ks for ps in page_sizes]
         self.regions = {}
         for b in buckets:
-            name = f"DecodeBucket_{b}"
+            name = self._key("decode", b)
             sel = self.session.autotune("dynamic", "select", name=name)
             for var in self.variants:
                 label = ",".join(f"{k}={v}"
@@ -124,7 +250,15 @@ class DecodeAutoTuner:
         self.kv_param_names: tuple = ()
         self.kv_regions: dict[int, object] = {}
         self.session.run("dynamic",
-                         [f"DecodeBucket_{b}" for b in buckets])
+                         [self._key("decode", b) for b in buckets])
+
+    def _key(self, kind: str, bucket: int | None = None,
+             chunk: int | None = None) -> str:
+        """This tuner's canonical name for one region — every region this
+        class declares or routes to goes through here, so the mesh-shape
+        axis applies uniformly."""
+        return region_key(kind, bucket, chunk=chunk,
+                          mesh_shape=self.mesh_shape)
 
     # -- prefill region (chunked prefill) ------------------------------------
     def add_prefill(self, make_prefill: Callable[..., Callable],
@@ -145,7 +279,7 @@ class DecodeAutoTuner:
         names = []
         for b in buckets:
             for cs in chunk_sizes:
-                name = f"PrefillBucket_{b}_c{cs}"
+                name = self._key("prefill", b, cs)
                 sel = self.session.autotune("dynamic", "select", name=name)
                 for var in self.prefill_variants:
                     label = ",".join(
@@ -186,7 +320,7 @@ class DecodeAutoTuner:
                               for bk in block_ks]
         names = []
         for b in buckets:
-            name = f"SpecBucket_{b}"
+            name = self._key("spec", b)
             sel = self.session.autotune("dynamic", "select", name=name,
                                         according=according)
             for var in self.spec_variants:
@@ -233,7 +367,7 @@ class DecodeAutoTuner:
                      f"condition (agreement >= {agreement_floor})")
         names = []
         for b in buckets:
-            name = f"KVPrecision_{b}"
+            name = self._key("kv_precision", b)
             sel = self.session.autotune("dynamic", "select", name=name,
                                         according=according)
             for var in self.kv_variants:
@@ -248,16 +382,18 @@ class DecodeAutoTuner:
         """Route one calibration measurement through the bucket's
         KVPrecision region (measure-then-commit)."""
         b = length_bucket(kv_len, self.kv_buckets)
-        return self.session.execute(f"KVPrecision_{b}", *args, **kwargs)
+        return self.session.execute(self._key("kv_precision", b),
+                                    *args, **kwargs)
 
     def kv_precision_committed(self, kv_len: int) -> bool:
         """Has this bucket's KVPrecision region committed a winner?"""
         b = length_bucket(kv_len, self.kv_buckets)
-        st = self.ctx.dynamic_state.get(f"KVPrecision_{b}")
+        st = self.ctx.dynamic_state.get(self._key("kv_precision", b))
         return st is not None and st.committed is not None
 
     def committed_kv_precision(self) -> dict[int, int | None]:
-        return {b: self.ctx.dynamic_state[f"KVPrecision_{b}"].committed
+        return {b: self.ctx.dynamic_state[
+                    self._key("kv_precision", b)].committed
                 for b in self.kv_regions}
 
     def committed_kv_precision_params(self) -> dict[int, dict | None]:
@@ -318,14 +454,14 @@ class DecodeAutoTuner:
         self.prefix_variants = [(g, ev) for g in min_matches
                                 for ev in evictions]
         sel = self.session.autotune("dynamic", "select",
-                                    name="PrefixPolicy",
+                                    name=self._key("prefix"),
                                     according=according)
         for var in self.prefix_variants:
             label = ",".join(f"{k}={v}"
                              for k, v in zip(self.prefix_param_names, var))
             sel.alternative(name=label)(make_policy(*var))
         self.prefix_region = sel.region
-        self.session.run("dynamic", ["PrefixPolicy"])
+        self.session.run("dynamic", [self._key("prefix")])
 
     # -- gateway-policy region (pipelined serving front-end) -----------------
     def add_gateway(self, max_inflights=(1, 2), admit_batches=(1, 4, 16),
@@ -357,7 +493,7 @@ class DecodeAutoTuner:
         self.gateway_variants = [(mi, ab) for mi in max_inflights
                                  for ab in admit_batches]
         sel = self.session.autotune("dynamic", "select",
-                                    name="GatewayPolicy",
+                                    name=self._key("gateway"),
                                     according=according)
         for var in self.gateway_variants:
             label = ",".join(f"{k}={v}"
@@ -371,20 +507,20 @@ class DecodeAutoTuner:
 
             sel.alternative(name=label)(report)
         self.gateway_region = sel.region
-        self.session.run("dynamic", ["GatewayPolicy"])
+        self.session.run("dynamic", [self._key("gateway")])
 
     def gateway_policy(self, stats: dict, **kwargs):
         """Report one measurement window's aggregate stats through the
         GatewayPolicy region (measure-then-commit; the committed path is
         a no-op passthrough)."""
-        return self.session.execute("GatewayPolicy", stats, **kwargs)
+        return self.session.execute(self._key("gateway"), stats, **kwargs)
 
     def gateway_candidate(self) -> int:
         """The candidate index whose knobs the gateway should apply for
         the *next* window: the committed winner if any, else the next
         untried index — the same iteration order ``execute`` uses, so
         window stats are attributed to the knobs that produced them."""
-        st = self.ctx.dynamic_state.get("GatewayPolicy")
+        st = self.ctx.dynamic_state.get(self._key("gateway"))
         if st is None:
             return 0
         if st.committed is not None:
@@ -394,7 +530,7 @@ class DecodeAutoTuner:
         return 0 if nxt is None else nxt
 
     def committed_gateway(self) -> int | None:
-        st = self.ctx.dynamic_state.get("GatewayPolicy")
+        st = self.ctx.dynamic_state.get(self._key("gateway"))
         return None if st is None else st.committed
 
     def committed_gateway_params(self) -> dict | None:
@@ -407,24 +543,24 @@ class DecodeAutoTuner:
 
     def decode(self, kv_len: int, *args, **kwargs):
         b = length_bucket(kv_len, self.buckets)
-        return self.session.execute(f"DecodeBucket_{b}", *args, **kwargs)
+        return self.session.execute(self._key("decode", b), *args, **kwargs)
 
     def prefix_policy(self, *args, **kwargs):
         """Route one admission's prefix match through the PrefixPolicy
         region (measure-then-commit, like every dynamic select)."""
-        return self.session.execute("PrefixPolicy", *args, **kwargs)
+        return self.session.execute(self._key("prefix"), *args, **kwargs)
 
     def spec(self, kv_len: int, *args, **kwargs):
         """Route one speculative verify through its bucket's region."""
         b = length_bucket(kv_len, self.spec_buckets)
-        return self.session.execute(f"SpecBucket_{b}", *args, **kwargs)
+        return self.session.execute(self._key("spec", b), *args, **kwargs)
 
     def spec_committed(self, kv_len: int) -> bool:
         """Has this bucket's SpecBucket region committed a winner?  The
         engine uses this to stop paying per-call measurement overhead
         (device sync + host-side acceptance proxy) once tuning is done."""
         b = length_bucket(kv_len, self.spec_buckets)
-        st = self.ctx.dynamic_state.get(f"SpecBucket_{b}")
+        st = self.ctx.dynamic_state.get(self._key("spec", b))
         return st is not None and st.committed is not None
 
     def spec_draft_k(self, kv_len: int, default: int) -> int:
@@ -434,7 +570,7 @@ class DecodeAutoTuner:
         must stay measurable).  Lets the engine stop paying draft-decode
         steps for tokens the committed verify would never accept."""
         b = length_bucket(kv_len, self.spec_buckets)
-        st = self.ctx.dynamic_state.get(f"SpecBucket_{b}")
+        st = self.ctx.dynamic_state.get(self._key("spec", b))
         if st is None or st.committed is None:
             return default
         return min(default, self.spec_variants[st.committed][0])
@@ -442,11 +578,11 @@ class DecodeAutoTuner:
     def prefill(self, prompt_len: int, chunk_size: int, *args, **kwargs):
         """Route one prefill chunk through its (bucket × chunk) region."""
         b = length_bucket(prompt_len, self.prefill_buckets)
-        return self.session.execute(f"PrefillBucket_{b}_c{chunk_size}",
+        return self.session.execute(self._key("prefill", b, chunk_size),
                                     *args, **kwargs)
 
     def committed(self) -> dict[int, int | None]:
-        return {b: self.ctx.dynamic_state[f"DecodeBucket_{b}"].committed
+        return {b: self.ctx.dynamic_state[self._key("decode", b)].committed
                 for b in self.buckets}
 
     def committed_params(self) -> dict[int, dict | None]:
@@ -459,7 +595,7 @@ class DecodeAutoTuner:
 
     def committed_prefill(self) -> dict[tuple[int, int], int | None]:
         return {key: self.ctx.dynamic_state[
-                    f"PrefillBucket_{key[0]}_c{key[1]}"].committed
+                    self._key("prefill", key[0], key[1])].committed
                 for key in self.prefill_regions}
 
     def committed_prefill_params(self) -> dict[tuple[int, int], dict | None]:
@@ -473,7 +609,7 @@ class DecodeAutoTuner:
         return out
 
     def committed_spec(self) -> dict[int, int | None]:
-        return {b: self.ctx.dynamic_state[f"SpecBucket_{b}"].committed
+        return {b: self.ctx.dynamic_state[self._key("spec", b)].committed
                 for b in self.spec_regions}
 
     def committed_spec_params(self) -> dict[int, dict | None]:
@@ -486,7 +622,7 @@ class DecodeAutoTuner:
         return out
 
     def committed_prefix(self) -> int | None:
-        st = self.ctx.dynamic_state.get("PrefixPolicy")
+        st = self.ctx.dynamic_state.get(self._key("prefix"))
         return None if st is None else st.committed
 
     def committed_prefix_params(self) -> dict | None:
