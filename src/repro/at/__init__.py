@@ -10,12 +10,16 @@ object instead of four parallel frontends:
   :meth:`~repro.at.session.AutoTuner.execute`.
 * :func:`tuned` — what kernels call to pick up tuned PPs (replaces the
   ``ops.set_tuned`` side-channel).
-* :data:`searchers` / :data:`executors` — pluggable backend registries;
-  new strategies register by name instead of editing the runtime.
+* :data:`searchers` / :data:`executors` / :data:`record_backends` —
+  pluggable backend registries; new strategies and storage layers
+  register by name instead of editing the runtime.
 * :class:`ATRecordStore` — the persistent tuning database (JSON-lines
   under the workdir, keyed by machine fingerprint + region + BP point);
   install/static optima survive process restarts and are warm-loaded
-  without re-timing.
+  without re-timing.  :class:`SqliteRecordStore` is the transactional
+  fleet-grade alternative, and :func:`open_record_store` overlays either
+  on a read-only **golden** winner DB (``python -m repro.at export`` /
+  ``merge`` / ``promote`` move winners between deployments).
 
 Phase constants (``INSTALL``/``STATIC``/``DYNAMIC``/``ALL``) and the
 declaration vocabulary (:class:`Varied`, :class:`Fitting`,
@@ -27,7 +31,12 @@ from ..core.params import ParamDecl, Varied
 from ..core.region import ATRegion, Fitting
 from ..core.runtime import (OAT_ALL, OAT_DYNAMIC, OAT_INSTALL, OAT_STATIC)
 from .backends import BackendRegistry, executors, searchers
-from .records import ATRecordStore, TuningRecord, machine_fingerprint
+from .records import (ATRecordStore, ATRecordWarning, GoldenOverlayStore,
+                      GoldenStore, RecordBackend, TuningRecord,
+                      machine_fingerprint, open_record_store,
+                      read_records_file, record_backends,
+                      reset_fingerprint_cache, write_records_file)
+from .sqlite_backend import SqliteRecordStore
 from .session import (AutoTuner, SelectHandle, TunedRegion, clear_published,
                       current_session, publish, publish_for_bp, tuned,
                       use_session)
@@ -49,9 +58,13 @@ def autotune(*args, **kwargs):
 __all__ = [
     "ALL", "INSTALL", "STATIC", "DYNAMIC",
     "OAT_ALL", "OAT_INSTALL", "OAT_STATIC", "OAT_DYNAMIC",
-    "ATRecordStore", "ATRegion", "According", "AutoTuner",
-    "BackendRegistry", "Fitting", "ParamDecl", "SelectHandle",
-    "TunedRegion", "TuningRecord", "Varied", "autotune", "clear_published",
-    "current_session", "executors", "machine_fingerprint", "publish",
-    "publish_for_bp", "searchers", "tuned", "use_session",
+    "ATRecordStore", "ATRecordWarning", "ATRegion", "According",
+    "AutoTuner", "BackendRegistry", "Fitting", "GoldenOverlayStore",
+    "GoldenStore", "ParamDecl", "RecordBackend", "SelectHandle",
+    "SqliteRecordStore", "TunedRegion", "TuningRecord", "Varied",
+    "autotune", "clear_published", "current_session", "executors",
+    "machine_fingerprint", "open_record_store", "publish",
+    "publish_for_bp", "read_records_file", "record_backends",
+    "reset_fingerprint_cache", "searchers", "tuned", "use_session",
+    "write_records_file",
 ]

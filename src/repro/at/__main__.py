@@ -1,0 +1,6 @@
+"""``python -m repro.at`` — see :mod:`repro.at.cli`."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

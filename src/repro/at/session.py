@@ -43,7 +43,7 @@ from ..core.runtime import (OAT_ALL, OAT_DYNAMIC, OAT_INSTALL, OAT_PROBSIZE,
                             OAT_STATIC, ATContext)
 from ..core.search import SearchPlan
 from .backends import executors, searchers
-from .records import ATRecordStore, bp_key
+from .records import ATRecordStore, bp_key, open_record_store
 
 PHASE_ORDER = ("install", "static", "dynamic")
 _PHASE_KIND = {"install": OAT_INSTALL, "static": OAT_STATIC,
@@ -199,15 +199,27 @@ class AutoTuner:
     searcher:
         Optional searcher backend name (``at.searchers``); ``None`` keeps
         the paper's per-region method composition.
+    record_backend:
+        Tuning-DB storage backend name (``at.record_backends``):
+        ``"jsonl"`` (default) or ``"sqlite"``.
+    golden_db:
+        Path to a read-only golden winner DB (exported via ``python -m
+        repro.at export``/``promote``) overlaid under the local store:
+        local record beats golden, golden beats cold — a fresh workdir
+        pointed at a golden DB warm-loads with zero measurements.
     """
 
     def __init__(self, workdir: str = ".", *, ctx: ATContext | None = None,
                  machine: str | None = None, feedback: bool = False,
                  executor: str = "wall-clock", searcher: str | None = None,
-                 records: ATRecordStore | None = None):
+                 records: ATRecordStore | None = None,
+                 record_backend: str = "jsonl",
+                 golden_db: str | None = None):
         self.ctx = ctx or ATContext(workdir, feedback=feedback)
         self.workdir = self.ctx.workdir
-        self.records = records or ATRecordStore(self.workdir, machine=machine)
+        self.records = records or open_record_store(
+            self.workdir, backend=record_backend, machine=machine,
+            golden_db=golden_db)
         self.executor = executor
         self.executor_calls = 0
         self.warm_hits: list[tuple[str, str]] = []    # (phase, region)

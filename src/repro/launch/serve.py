@@ -103,6 +103,8 @@ class ServeConfig:
     slo_itl_s: float = 5.0
     kv_dtype: str = "fp"
     mesh: str | None = None
+    tuning_backend: str = "jsonl"
+    golden_db: str | None = None
 
     #: argparse dest -> field, for the names that differ
     _ARG_FIELDS = {"requests": "n_requests", "lanes": "n_lanes",
@@ -205,7 +207,9 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                     spec_k: int | None = None,
                     prefix_cache: bool = False,
                     kv_precision: bool = False,
-                    mesh=None, mesh_shape=None):
+                    mesh=None, mesh_shape=None,
+                    tuning_backend: str = "jsonl",
+                    golden_db: str | None = None):
     """Per-bucket dynamic select over decode variants (repro.at session).
 
     Each candidate gets its own jit cache and publishes its block PPs
@@ -226,9 +230,15 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
     KV-precision calibration bench stays unsharded: it measures on
     throwaway pools as a cost proxy, and its greedy-agreement guard
     compares like with like either way.
+
+    ``tuning_backend`` selects the record store behind the session
+    (``at.record_backends``: jsonl default, sqlite for concurrent
+    workers); ``golden_db`` overlays a read-only fleet winner DB so a
+    fresh deployment warm-loads committed optima it never measured.
     """
     from ..tuning import DecodeAutoTuner
-    session = at.AutoTuner(workdir)
+    session = at.AutoTuner(workdir, record_backend=tuning_backend,
+                           golden_db=golden_db)
 
     def _jit_step(fn, **jit_kw):
         if mesh is not None:
@@ -479,7 +489,9 @@ def serve_config(scfg: ServeConfig) -> dict:
                             spec_k=spec_k if draft else None,
                             prefix_cache=prefix_cache,
                             kv_precision=kv_dtype == "auto",
-                            mesh=mesh, mesh_shape=scfg.mesh) \
+                            mesh=mesh, mesh_shape=scfg.mesh,
+                            tuning_backend=scfg.tuning_backend,
+                            golden_db=scfg.golden_db) \
         if autotune else None
     resolved_kv = kv_dtype
     if kv_dtype == "auto":
@@ -557,6 +569,9 @@ def serve_config(scfg: ServeConfig) -> dict:
             "warm_regions": sorted(
                 {name for _, name in tuner.session.warm_hits}),
         } if tuner else None),
+        # which durability layer the winners live in (backend, path,
+        # record count, golden overlay) — None when serving untuned
+        "tuning_db": engine.tuning_db(),
         "finished": len(finished), "requests": n_requests,
         "decode_steps": engine.steps,
         "generated_tokens": summary["generated_tokens"],
@@ -662,6 +677,14 @@ def main() -> None:
                     help="run-time AT over decode buckets (repro.at)")
     ap.add_argument("--workdir", default=".",
                     help="AT session workdir (param files + record store)")
+    ap.add_argument("--tuning-backend", default="jsonl",
+                    help="tuning-DB backend under --workdir "
+                         "(at.record_backends: jsonl | sqlite)")
+    ap.add_argument("--golden-db", default=None,
+                    help="read-only golden winner DB overlaid under the "
+                         "local store (exported via 'python -m repro.at "
+                         "export'): local record beats golden, golden "
+                         "beats cold")
     args = ap.parse_args()
     out = serve_config(ServeConfig.from_args(args))
     def fmt(x, spec):

@@ -653,6 +653,17 @@ class ServingEngine:
                             if self.drafted_tokens else 0.0),
         }
 
+    def tuning_db(self) -> dict | None:
+        """Identity of the tuning DB feeding this engine's AT regions —
+        backend name, path, record count and any golden overlay (``None``
+        when serving untuned).  Surfaces which durability layer the
+        committed winners live in, next to the winners themselves in the
+        serve report."""
+        session = getattr(self.autotuner, "session", None)
+        if session is None:
+            return None
+        return session.records.describe()
+
     # -- one scheduler tick: schedule -> dispatch -> emit --------------------
     # step() is the synchronous composition; the gateway's pipelined loop
     # calls the three phases itself so the host can do other work (drain

@@ -186,6 +186,20 @@ def parse_region(name: str) -> tuple[str, int | None, int | None,
     raise KeyError(name)
 
 
+def describe_region(name: str) -> dict | None:
+    """Parse a region name into a display record for the ``repro.at``
+    CLI: ``{"kind", "bucket", "chunk", "mesh"}`` (``mesh`` is the
+    ``"RxC"`` spelling, ``""`` for legacy/unsuffixed names).  ``None``
+    for names outside the serving families (install/static kernel
+    regions enumerate under their literal names instead)."""
+    try:
+        kind, bucket, chunk, shape = parse_region(name)
+    except (KeyError, ValueError):
+        return None
+    return {"kind": kind, "bucket": bucket, "chunk": chunk,
+            "mesh": "x".join(str(d) for d in shape)}
+
+
 def resolve_region(name: str) -> str:
     """Canonicalize a possibly-legacy region name through the alias
     table.  Today every legacy name is already canonical (that identity

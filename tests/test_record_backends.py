@@ -1,0 +1,636 @@
+"""Tuning-DB hardening: torn-line recovery, atomic concurrent appends,
+pluggable jsonl/sqlite backends, golden-winner export/merge/overlay, and
+the ``python -m repro.at`` fleet CLI."""
+import json
+import multiprocessing
+import os
+import sys
+import warnings
+
+import pytest
+
+import repro.at as at
+from repro.at import cli
+from repro.at.records import (TuningRecord, bp_key, prefer_incoming,
+                              read_records_file, write_records_file)
+from repro.core import Varied
+from repro.core.errors import OATSpecError
+
+BACKENDS = ("jsonl", "sqlite")
+
+
+@pytest.fixture(autouse=True)
+def _isolate_published():
+    at.clear_published()
+    yield
+    at.clear_published()
+
+
+def open_store(workdir, backend="jsonl", machine="test-box", **kw):
+    return at.open_record_store(str(workdir), backend=backend,
+                                machine=machine, **kw)
+
+
+# --------------------------------------------------------------------------
+# satellite: torn-line recovery + atomic appends
+# --------------------------------------------------------------------------
+
+class TestTornLineRecovery:
+    def test_corrupt_line_warns_with_line_number(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", None, {"bm": 256}, cost=1.0)
+        store.put("install", "B", None, {"bm": 512}, cost=2.0)
+        path = store.path
+        with open(path, "a") as f:
+            f.write('{"machine": "test-box", "phase": "inst')  # torn write
+        with pytest.warns(at.ATRecordWarning,
+                          match=r"OAT_Records\.jsonl:3"):
+            reloaded = open_store(tmp_path)
+        # the intact winners survive; only the torn line degrades
+        assert len(reloaded) == 2
+        assert reloaded.lookup("install", "A").pp == {"bm": 256}
+        assert reloaded.lookup("install", "B").pp == {"bm": 512}
+
+    def test_unknown_fields_warn_not_crash(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", None, {"bm": 256})
+        with open(store.path, "a") as f:
+            f.write(json.dumps({"machine": "m", "mystery": 1}) + "\n")
+        with pytest.warns(at.ATRecordWarning, match=":2:"):
+            reloaded = open_store(tmp_path)
+        assert len(reloaded) == 1
+
+    def test_blank_lines_are_not_corruption(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", None, {"bm": 256})
+        with open(store.path, "a") as f:
+            f.write("\n\n")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            reloaded = open_store(tmp_path)
+        assert len(reloaded) == 1
+
+    def test_put_appends_one_whole_line(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", None, {"payload": "x" * 4096})
+        store.put("install", "B", None, {"bm": 1})
+        with open(store.path) as f:
+            lines = f.read().splitlines()
+        assert len(lines) == 2
+        for line in lines:
+            json.loads(line)  # every line individually well-formed
+
+
+def _append_worker(workdir, worker, count):
+    store = at.open_record_store(workdir, machine="test-box")
+    for i in range(count):
+        # long payloads make torn interleaved writes overwhelmingly
+        # likely if appends were not a single O_APPEND write
+        store.put("install", f"W{worker}_R{i}", None,
+                  {"payload": f"w{worker}" * 1500, "i": i}, cost=float(i))
+
+
+class TestConcurrentPut:
+    def test_two_process_append_safety(self, tmp_path):
+        n = 40
+        ctx = multiprocessing.get_context("spawn")
+        procs = [ctx.Process(target=_append_worker,
+                             args=(str(tmp_path), w, n)) for w in (1, 2)]
+        for p in procs:
+            p.start()
+        for p in procs:
+            p.join()
+            assert p.exitcode == 0
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # any torn line would warn
+            store = open_store(tmp_path)
+        assert len(store) == 2 * n
+        assert store.lookup("install", "W2_R7").pp["i"] == 7
+
+
+# --------------------------------------------------------------------------
+# satellite: fingerprint failure path is not cached
+# --------------------------------------------------------------------------
+
+class TestMachineFingerprint:
+    @pytest.fixture(autouse=True)
+    def _fresh_cache(self):
+        at.reset_fingerprint_cache()
+        yield
+        at.reset_fingerprint_cache()
+
+    def test_failure_path_not_cached(self, monkeypatch):
+        from repro.at import records
+        with monkeypatch.context() as m:
+            m.setitem(sys.modules, "jax", None)
+            degraded = at.machine_fingerprint()
+            assert degraded.endswith("-nojax")
+            assert records._fingerprint_cache is None  # not poisoned
+        # jax back: the very next call heals and caches the real id
+        healed = at.machine_fingerprint()
+        assert not healed.endswith("-nojax")
+        assert records._fingerprint_cache == healed
+
+    def test_reset_forgets_cached_fingerprint(self):
+        from repro.at import records
+        fp = at.machine_fingerprint()
+        assert records._fingerprint_cache == fp
+        at.reset_fingerprint_cache()
+        assert records._fingerprint_cache is None
+        assert at.machine_fingerprint() == fp
+
+
+# --------------------------------------------------------------------------
+# satellite: non-finite floats sanitized on write, tolerated on load
+# --------------------------------------------------------------------------
+
+class TestNonFiniteSanitization:
+    def test_nan_inf_become_null_on_disk(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", {"x": float("inf")}, {"bm": 256},
+                  cost=float("nan"))
+        with open(store.path) as f:
+            line = f.read().strip()
+
+        def no_constants(tok):
+            raise AssertionError(f"non-finite token {tok} on disk")
+
+        parsed = json.loads(line, parse_constant=no_constants)
+        assert parsed["cost"] is None
+        assert parsed["bp"]["x"] is None
+
+    def test_legacy_nan_tokens_tolerated_on_load(self, tmp_path):
+        path = tmp_path / "OAT_Records.jsonl"
+        rec = {"machine": "test-box", "phase": "install", "region": "A",
+               "bp": {}, "pp": {"bm": 256, "bad": float("inf")},
+               "cost": float("nan"), "n_evaluations": 3}
+        path.write_text(json.dumps(rec) + "\n")  # emits bare NaN/Infinity
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            store = open_store(tmp_path)
+        got = store.lookup("install", "A")
+        assert got.cost is None
+        assert got.pp == {"bm": 256, "bad": None}
+
+    def test_merge_never_prefers_unmeasured_cost(self):
+        cur = TuningRecord("m", "install", "A", {}, {"bm": 1}, cost=2.0)
+        inc = TuningRecord("m", "install", "A", {}, {"bm": 2}, cost=None)
+        assert not prefer_incoming(cur, inc)           # None never wins
+        assert prefer_incoming(inc, cur)               # measured beats None
+        assert prefer_incoming(cur, inc, "incoming")
+        assert not prefer_incoming(cur, inc, "existing")
+        with pytest.raises(ValueError):
+            prefer_incoming(cur, inc, "bogus")
+
+
+# --------------------------------------------------------------------------
+# satellite: (machine, phase, region) secondary index
+# --------------------------------------------------------------------------
+
+class TestSecondaryIndex:
+    def test_lookup_all_scoped_to_machine_and_region(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("static", "Chunk", {"n": 1024}, {"c": 32}, cost=1.0)
+        store.put("static", "Chunk", {"n": 2048}, {"c": 64}, cost=2.0)
+        store.put("static", "Other", {"n": 1024}, {"c": 16})
+        store.put_record(TuningRecord("other-box", "static", "Chunk",
+                                      {"n": 1024}, {"c": 99}))
+        got = store.lookup_all("static", "Chunk")
+        assert sorted(r.pp["c"] for r in got) == [32, 64]
+        assert store.regions("static") == ["Chunk", "Other"]
+        assert store.regions("install") == []
+
+    def test_overwrite_replaces_in_both_indexes(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", {"n": 1}, {"bm": 128}, cost=5.0)
+        store.put("install", "A", {"n": 1}, {"bm": 256}, cost=1.0)
+        assert len(store.lookup_all("install", "A")) == 1
+        assert store.lookup("install", "A", {"n": 1}).pp["bm"] == 256
+        # last-wins survives a reload of the append-only file too
+        reloaded = open_store(tmp_path)
+        assert reloaded.lookup("install", "A", {"n": 1}).pp["bm"] == 256
+
+    def test_index_rebuilt_by_load_on_both_backends(self, tmp_path):
+        for backend in BACKENDS:
+            wd = tmp_path / backend
+            wd.mkdir()
+            store = open_store(wd, backend)
+            store.put("dynamic", "DecodeBucket_128", None, {"variant": 1})
+            reloaded = open_store(wd, backend)
+            assert reloaded.regions("dynamic") == ["DecodeBucket_128"]
+            assert len(reloaded.lookup_all("dynamic",
+                                           "DecodeBucket_128")) == 1
+
+
+# --------------------------------------------------------------------------
+# tentpole: the backend registry + sqlite backend
+# --------------------------------------------------------------------------
+
+class TestBackendRegistry:
+    def test_registered_backends(self):
+        assert set(at.record_backends.names()) >= {"jsonl", "sqlite",
+                                                   "memory"}
+        assert at.record_backends.get("jsonl") is at.ATRecordStore
+        assert at.record_backends.get("sqlite") is at.SqliteRecordStore
+
+    def test_unknown_backend_is_a_spec_error(self, tmp_path):
+        with pytest.raises(OATSpecError):
+            at.open_record_store(str(tmp_path), backend="csv")
+
+
+class TestSqliteBackend:
+    def test_put_survives_reopen(self, tmp_path):
+        store = open_store(tmp_path, "sqlite")
+        store.put("install", "A", {"n": 1}, {"bm": 256}, cost=1.5,
+                  n_evaluations=9)
+        assert os.path.exists(os.path.join(str(tmp_path),
+                                           "OAT_Records.sqlite"))
+        got = open_store(tmp_path, "sqlite").lookup("install", "A",
+                                                    {"n": 1})
+        assert got.pp == {"bm": 256}
+        assert got.cost == 1.5 and got.n_evaluations == 9
+
+    def test_upsert_keeps_one_row_per_key(self, tmp_path):
+        store = open_store(tmp_path, "sqlite")
+        for bm in (128, 256, 512):
+            store.put("install", "A", {"n": 1}, {"bm": bm})
+        reloaded = open_store(tmp_path, "sqlite")
+        assert len(reloaded) == 1
+        assert reloaded.lookup("install", "A", {"n": 1}).pp["bm"] == 512
+
+    def test_two_process_put_safety(self, tmp_path):
+        n = 15
+        ctx = multiprocessing.get_context("spawn")
+        procs = [ctx.Process(target=_sqlite_worker,
+                             args=(str(tmp_path), w, n)) for w in (1, 2)]
+        for p in procs:
+            p.start()
+        for p in procs:
+            p.join()
+            assert p.exitcode == 0
+        assert len(open_store(tmp_path, "sqlite")) == 2 * n
+
+
+def _sqlite_worker(workdir, worker, count):
+    store = at.open_record_store(workdir, backend="sqlite",
+                                 machine="test-box")
+    for i in range(count):
+        store.put("install", f"W{worker}_R{i}", None, {"i": i})
+
+
+# --------------------------------------------------------------------------
+# satellite: JSONL <-> sqlite equivalence (same winners, warm path intact)
+# --------------------------------------------------------------------------
+
+def build_session(workdir, *, backend="jsonl", booby_trap=False, **kw):
+    """One region per phase, mirroring test_at_session.build_session."""
+    kw.setdefault("executor", "analytic-cost")
+    t = at.AutoTuner(str(workdir), record_backend=backend, **kw)
+    t.set_bps(numprocs=1, start=1024, end=2048, dist=1024)
+
+    @t.autotune("install", "variable", name="Blocks",
+                varied=Varied(("bm", "bn"), values=(128, 256, 512)),
+                search="ad-hoc")
+    def blocks(bm=128, bn=128):
+        if booby_trap:
+            raise AssertionError("executed on the warm path")
+        return abs(bm - 256) + abs(bn - 512) + 1.0
+
+    @t.autotune("static", "variable", name="Chunk",
+                varied=Varied(("c",), values=(32, 64, 128)))
+    def chunk(c=32):
+        if booby_trap:
+            raise AssertionError("executed on the warm path")
+        return abs(c - 64) + 1.0
+
+    sel = t.autotune("dynamic", "select", name="DecodeBucket_128")
+    sel.alternative(name="slow")(lambda: "slow")
+    sel.alternative(name="fast")(lambda: "fast")
+    return t, sel
+
+
+class TestBackendEquivalence:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_warm_restart_zero_tuning(self, tmp_path, backend):
+        t1, sel1 = build_session(tmp_path, backend=backend)
+        t1.run("all")
+        for _ in range(3):                 # measure + commit the select
+            sel1()
+        assert t1.ctx.dynamic_state["DecodeBucket_128"].committed
+
+        t2, sel2 = build_session(tmp_path, backend=backend,
+                                 booby_trap=True)
+        assert t2.records.backend_name == backend
+        t2.run("all")                      # booby trap proves zero timing
+        assert t2.best("Blocks") == {"Blocks_BM": 256, "Blocks_BN": 512}
+        assert t2.best("Chunk") == {"Chunk_C": 64}
+        st = t2.ctx.dynamic_state["DecodeBucket_128"]
+        assert st.committed is not None and not st.tried
+
+    def test_both_backends_find_identical_winners(self, tmp_path):
+        winners = {}
+        for backend in BACKENDS:
+            wd = tmp_path / backend
+            wd.mkdir()
+            t, sel = build_session(wd, backend=backend)
+            t.run("all")
+            winners[backend] = (t.best("Blocks"), t.best("Chunk"))
+        assert winners["jsonl"] == winners["sqlite"]
+
+
+# --------------------------------------------------------------------------
+# satellite: export -> merge round trip, zero re-tuning after merge
+# --------------------------------------------------------------------------
+
+class TestExportMerge:
+    @pytest.mark.parametrize("src", BACKENDS)
+    @pytest.mark.parametrize("dst", BACKENDS)
+    @pytest.mark.parametrize("ext", ("jsonl", "sqlite"))
+    def test_round_trip_zero_retuning(self, tmp_path, src, dst, ext):
+        t1, sel1 = build_session(tmp_path / "tuned", backend=src)
+        t1.run("all")
+        for _ in range(3):
+            sel1()
+        golden = str(tmp_path / f"golden.{ext}")
+        n = t1.records.export(golden)
+        assert n == len(t1.records)
+
+        fresh = tmp_path / "fresh"
+        fresh.mkdir()
+        store = at.open_record_store(str(fresh), backend=dst)
+        stats = store.merge_records(read_records_file(golden))
+        assert stats["added"] == n and stats["updated"] == 0
+
+        t2, _ = build_session(fresh, backend=dst, booby_trap=True)
+        t2.run("all")                      # warm from merged winners only
+        assert t2.best("Blocks") == t1.best("Blocks")
+        assert t2.best("Chunk") == t1.best("Chunk")
+        assert t2.ctx.dynamic_state["DecodeBucket_128"].committed \
+            == t1.ctx.dynamic_state["DecodeBucket_128"].committed
+
+    def test_merge_better_cost_wins(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", None, {"bm": 128}, cost=5.0)
+        incoming = [
+            TuningRecord("test-box", "install", "A", {}, {"bm": 256},
+                         cost=1.0),                      # better: replaces
+            TuningRecord("test-box", "install", "B", {}, {"bm": 512},
+                         cost=9.0),                      # new: added
+        ]
+        stats = store.merge_records(incoming)
+        assert stats == {"added": 1, "updated": 1, "kept": 0}
+        assert store.lookup("install", "A").pp["bm"] == 256
+        worse = [TuningRecord("test-box", "install", "A", {}, {"bm": 64},
+                              cost=3.0)]
+        assert store.merge_records(worse)["kept"] == 1
+        assert store.lookup("install", "A").pp["bm"] == 256
+
+    def test_merge_preserves_foreign_machine_keys(self, tmp_path):
+        store = open_store(tmp_path)
+        store.merge_records([TuningRecord("other-box", "install", "A",
+                                          {}, {"bm": 256}, cost=1.0)])
+        assert store.lookup("install", "A") is None   # not ours
+        recs = list(store.records())
+        assert len(recs) == 1 and recs[0].machine == "other-box"
+        # and it survives the reload (persisted, not just indexed)
+        assert list(open_store(tmp_path).records())[0].machine \
+            == "other-box"
+
+    def test_export_filters_machine_and_phase(self, tmp_path):
+        store = open_store(tmp_path)
+        store.put("install", "A", None, {"bm": 1})
+        store.put("static", "B", None, {"c": 2})
+        store.put_record(TuningRecord("other-box", "install", "A", {},
+                                      {"bm": 9}))
+        out = str(tmp_path / "g.jsonl")
+        assert store.export(out) == 3                       # all machines
+        assert store.export(out, machine="test-box") == 2
+        assert store.export(out, machine="test-box",
+                            phase="install") == 1
+
+
+# --------------------------------------------------------------------------
+# satellite: golden overlay precedence
+# --------------------------------------------------------------------------
+
+class TestGoldenOverlay:
+    def make_golden(self, path, pp, cost=1.0):
+        write_records_file(str(path), [
+            TuningRecord("test-box", "install", "A", {}, dict(pp),
+                         cost=cost)])
+
+    def test_golden_beats_cold(self, tmp_path):
+        golden = tmp_path / "golden.jsonl"
+        self.make_golden(golden, {"bm": 256})
+        store = open_store(tmp_path / "wd", golden_db=str(golden))
+        assert store.backend_name == "jsonl+golden"
+        assert store.lookup("install", "A").pp == {"bm": 256}
+
+    def test_local_beats_golden(self, tmp_path):
+        golden = tmp_path / "golden.jsonl"
+        self.make_golden(golden, {"bm": 256})
+        store = open_store(tmp_path / "wd", golden_db=str(golden))
+        store.put("install", "A", None, {"bm": 512}, cost=0.5)
+        assert store.lookup("install", "A").pp == {"bm": 512}
+        assert len(store.lookup_all("install", "A")) == 1  # shadowed
+
+    def test_writes_never_touch_golden_file(self, tmp_path):
+        golden = tmp_path / "golden.jsonl"
+        self.make_golden(golden, {"bm": 256})
+        before = golden.read_bytes()
+        store = open_store(tmp_path / "wd", golden_db=str(golden))
+        store.put("install", "A", None, {"bm": 512})
+        store.put("static", "New", None, {"c": 64})
+        assert golden.read_bytes() == before
+
+    def test_golden_store_is_read_only(self, tmp_path):
+        golden = tmp_path / "golden.jsonl"
+        self.make_golden(golden, {"bm": 256})
+        gs = at.GoldenStore(str(golden))
+        with pytest.raises(RuntimeError, match="read-only"):
+            gs.put("install", "X", None, {"bm": 1})
+
+    def test_missing_golden_warns_and_degrades(self, tmp_path):
+        with pytest.warns(at.ATRecordWarning, match="not found"):
+            store = open_store(tmp_path, golden_db=str(tmp_path /
+                                                       "missing.jsonl"))
+        assert store.lookup("install", "A") is None
+
+    def test_sqlite_golden_db(self, tmp_path):
+        golden = tmp_path / "golden.sqlite"
+        self.make_golden(golden, {"bm": 256})
+        store = open_store(tmp_path / "wd", "sqlite",
+                           golden_db=str(golden))
+        assert store.backend_name == "sqlite+golden"
+        assert store.lookup("install", "A").pp == {"bm": 256}
+
+    def test_session_warm_loads_from_golden_only(self, tmp_path):
+        t1, sel1 = build_session(tmp_path / "tuned")
+        t1.run("all")
+        for _ in range(3):
+            sel1()
+        golden = str(tmp_path / "golden.jsonl")
+        t1.records.export(golden)
+
+        fresh = tmp_path / "fresh"
+        fresh.mkdir()
+        t2, _ = build_session(fresh, booby_trap=True, golden_db=golden)
+        assert t2.records.backend_name == "jsonl+golden"
+        t2.run("all")                      # zero measurements, all golden
+        assert t2.best("Blocks") == t1.best("Blocks")
+        assert not os.path.exists(os.path.join(str(fresh),
+                                               "OAT_Records.jsonl"))
+
+    def test_describe_reports_overlay(self, tmp_path):
+        golden = tmp_path / "golden.jsonl"
+        self.make_golden(golden, {"bm": 256})
+        store = open_store(tmp_path / "wd", golden_db=str(golden))
+        d = store.describe()
+        assert d["backend"] == "jsonl+golden"
+        assert d["golden"] == str(golden)
+        assert d["records"] == 1
+
+
+# --------------------------------------------------------------------------
+# acceptance: every committed region family round-trips, legacy + mesh
+# --------------------------------------------------------------------------
+
+REGION_NAMES = (
+    "DecodeBucket_128", "PrefillBucket_512_c128", "SpecBucket_128",
+    "KVPrecision_128", "PrefixPolicy", "GatewayPolicy",
+    "DecodeBucket_128_mesh2x2", "PrefillBucket_512_c128_mesh2x2",
+    "SpecBucket_128_mesh2x2", "KVPrecision_128_mesh2x2",
+    "PrefixPolicy_mesh2x2", "GatewayPolicy_mesh2x2",
+)
+
+
+class TestRegionFamilies:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_all_families_round_trip(self, tmp_path, backend):
+        src = open_store(tmp_path / "src", "jsonl")
+        for name in REGION_NAMES:
+            src.put("dynamic", name, None, {"winner": name}, cost=1.0)
+        golden = str(tmp_path / "golden.jsonl")
+        src.export(golden)
+
+        wd = tmp_path / backend
+        wd.mkdir()
+        dst = open_store(wd, backend)
+        dst.merge_records(read_records_file(golden))
+        for name in REGION_NAMES:
+            got = open_store(wd, backend).lookup("dynamic", name)
+            assert got is not None and got.pp == {"winner": name}
+
+    def test_describe_region_parses_all_families(self):
+        from repro.tuning.dynamic import describe_region
+        for name in REGION_NAMES:
+            d = describe_region(name)
+            assert d is not None, name
+            assert d["mesh"] == ("2x2" if name.endswith("_mesh2x2")
+                                 else "")
+        assert describe_region("Blocks") is None  # kernel region: literal
+
+
+# --------------------------------------------------------------------------
+# tentpole: the repro.at CLI
+# --------------------------------------------------------------------------
+
+class TestCLI:
+    def seed(self, workdir, backend="jsonl"):
+        store = open_store(workdir, backend)
+        store.put("dynamic", "DecodeBucket_128", None, {"variant": "f"},
+                  cost=1.0)
+        store.put("install", "Blocks", {"n": 1024}, {"bm": 256}, cost=2.0)
+        return store
+
+    def test_list(self, tmp_path, capsys):
+        self.seed(tmp_path)
+        assert cli.main(["list", "--workdir", str(tmp_path)]) == 0
+        out = capsys.readouterr().out
+        assert "DecodeBucket_128" in out and "kind=decode" in out
+        assert "2 record(s) total" in out
+
+    def test_list_empty(self, tmp_path, capsys):
+        assert cli.main(["list", "--workdir", str(tmp_path)]) == 0
+        assert "no records" in capsys.readouterr().out
+
+    def test_export_then_list_db(self, tmp_path, capsys):
+        self.seed(tmp_path)
+        golden = str(tmp_path / "golden.sqlite")
+        assert cli.main(["export", "--workdir", str(tmp_path),
+                         "--out", golden]) == 0
+        assert "exported 2 record(s)" in capsys.readouterr().out
+        assert cli.main(["list", "--db", golden, "--workdir",
+                         str(tmp_path / "nowhere")]) == 0
+        assert "DecodeBucket_128" in capsys.readouterr().out
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_merge_into_fresh_workdir(self, tmp_path, capsys, backend):
+        self.seed(tmp_path / "tuned")
+        golden = str(tmp_path / "golden.jsonl")
+        cli.main(["export", "--workdir", str(tmp_path / "tuned"),
+                  "--out", golden])
+        fresh = tmp_path / "fresh"
+        fresh.mkdir()
+        assert cli.main(["merge", "--workdir", str(fresh),
+                         "--backend", backend, "--db", golden]) == 0
+        assert "2 added" in capsys.readouterr().out
+        got = open_store(fresh, backend).lookup("dynamic",
+                                                "DecodeBucket_128")
+        assert got.pp == {"variant": "f"}
+
+    def test_stale_and_fail_on_stale(self, tmp_path, capsys):
+        self.seed(tmp_path)
+        argv = ["stale", "--workdir", str(tmp_path),
+                "--machine", "other-box"]
+        assert cli.main(argv) == 0
+        out = capsys.readouterr().out
+        assert "2 stale region(s) for other-box" in out
+        assert cli.main(argv + ["--fail-on-stale"]) == 1
+        # the tuned machine itself has nothing stale
+        assert cli.main(["stale", "--workdir", str(tmp_path),
+                         "--machine", "test-box",
+                         "--fail-on-stale"]) == 0
+
+    def test_promote_accumulates_golden(self, tmp_path, capsys):
+        golden = str(tmp_path / "golden.jsonl")
+        self.seed(tmp_path / "a")
+        assert cli.main(["promote", "--workdir", str(tmp_path / "a"),
+                         "--db", golden]) == 0
+        assert "2 added" in capsys.readouterr().out
+        # a second workdir with a better decode cost wins on promote
+        b = open_store(tmp_path / "b")
+        b.put("dynamic", "DecodeBucket_128", None, {"variant": "g"},
+              cost=0.5)
+        assert cli.main(["promote", "--workdir", str(tmp_path / "b"),
+                         "--db", golden]) == 0
+        assert "1 updated" in capsys.readouterr().out
+        by_region = {r.region: r for r in read_records_file(golden)}
+        assert by_region["DecodeBucket_128"].pp == {"variant": "g"}
+        assert len(by_region) == 2
+
+
+# --------------------------------------------------------------------------
+# threading: AutoTuner / engine expose the backend choice
+# --------------------------------------------------------------------------
+
+class TestSessionThreading:
+    def test_autotuner_backend_kwargs(self, tmp_path):
+        t = at.AutoTuner(str(tmp_path), record_backend="sqlite")
+        d = t.records.describe()
+        assert d["backend"] == "sqlite"
+        assert d["path"].endswith("OAT_Records.sqlite")
+
+    def test_autotuner_golden_overlay(self, tmp_path):
+        golden = tmp_path / "golden.jsonl"
+        write_records_file(str(golden), [
+            TuningRecord(at.machine_fingerprint(), "install", "A", {},
+                         {"bm": 256}, cost=1.0)])
+        t = at.AutoTuner(str(tmp_path), golden_db=str(golden))
+        assert t.records.describe()["golden"] == str(golden)
+        assert t.records.lookup("install", "A").pp == {"bm": 256}
+
+    def test_bp_key_canonicalizes_numpy(self):
+        import numpy as np
+        assert bp_key({"n": np.int64(3), "m": 1}) \
+            == bp_key({"m": 1, "n": 3})
