@@ -40,6 +40,14 @@ dispatch) and emits ``BENCH_serving.json``:
   throughput plus ``greedy_agreement`` — its token-level match against
   the unsharded outputs, which the sharded dispatch keeps bit-identical
   (gated by ``compare.py``).
+* **long_context** cells — 1-lane long-prompt decode on the paged
+  engine, one cell pair per ``--long-lens`` entry: split-KV committed
+  (run-time AT over the ``num_splits`` ladder, warm-loaded for the
+  timed repeats) vs forced ``num_splits=1`` (the sequential kernel
+  spelling).  Headline is ``itl_p50_s`` — the per-step critical path
+  the Flash-Decoding split axis shortens; ``compare.py`` gates the
+  committed cell's greedy agreement against forced-1 at 100% and its
+  p50 ITL at <= forced-1.
 * **shared_prefix** cells — every request carries the same long system
   prompt (the production shape: few-shot templates, multi-turn history)
   on the chunked paged engine, prefix cache off vs on.  The cached cell
@@ -354,6 +362,96 @@ def bench_mixed(arch: str, prefill_chunk: int | None, n_short: int,
     }
 
 
+def bench_long_context(arch: str, long_len: int, n_requests: int,
+                       max_new: int, page_size: int, repeats: int,
+                       seed: int = 0) -> list:
+    """Long-context decode: split-KV committed vs forced-sequential.
+
+    One lane, long prompts: every decode step walks a long page table,
+    so p50 ITL tracks the serial KV walk the Flash-Decoding split axis
+    is meant to shorten.  Two cells per length, both through the serve
+    harness with run-time tuning on: ``num_splits`` forced to 1 (the
+    legacy sequential kernel spelling — only the ``block_k`` ladder is
+    tuned) and the autotuned split ladder ({1, 2, 4}, committed per
+    length bucket).  Each mode pays one cold run that tunes into its own
+    workdir, then the timed repeats warm-load the committed DB
+    (``measurements == 0`` — steady state, no tuning overhead in the
+    rows) and the min-ITL repeat is kept.  The committed cell reports
+    ``greedy_agreement`` against the forced-1 outputs — the split-KV
+    combine is exact up to fp32 rounding and greedy argmax must not
+    flip — and ``compare.py`` gates agreement at 100% plus committed
+    p50 ITL <= forced-1 (the tuner may *pick* the sequential spelling,
+    it must never commit something slower).
+    """
+    import tempfile
+
+    from repro import at
+    from repro.launch.serve import serve
+
+    rows = []
+    seq_outputs: dict = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        for mode in (1, "auto"):
+            kw = {"autotune": True}
+            if mode != "auto":
+                kw["num_splits"] = mode
+            workdir = os.path.join(tmp, f"ns_{mode}")
+            os.makedirs(workdir, exist_ok=True)
+            best = None
+            for rep in range(1 + max(1, repeats)):
+                at.clear_published()
+                try:
+                    report = serve(
+                        arch=arch, cache="paged", page_size=page_size,
+                        n_requests=n_requests, n_lanes=1,
+                        max_len=long_len + max_new + 4,
+                        prompt_len=long_len, max_new=max_new,
+                        workdir=workdir, seed=seed, **kw)
+                finally:
+                    at.clear_published()
+                if rep == 0:
+                    continue  # cold run pays the tuning measurements
+                if best is None or \
+                        (report["p50_itl_s"] if report["p50_itl_s"]
+                         is not None else float("inf")) < \
+                        (best["p50_itl_s"] if best["p50_itl_s"]
+                         is not None else float("inf")):
+                    best = report
+            outputs = best["outputs"]
+            if mode != "auto":
+                seq_outputs = outputs
+                agreement = 1.0
+            else:
+                match = total = 0
+                for rid, ref in seq_outputs.items():
+                    got = outputs.get(rid, [])
+                    total += max(len(ref), len(got))
+                    match += sum(a == b for a, b in zip(ref, got))
+                agreement = match / total if total else 1.0
+            committed = best.get("committed_buckets") or {}
+            rows.append({
+                "arch": arch, "cache": "paged", "workload": "long_context",
+                "long_len": long_len, "num_splits": mode, "n_lanes": 1,
+                "committed_splits": {
+                    str(b): (pp or {}).get("num_splits")
+                    for b, pp in committed.items()},
+                "requests": n_requests, "finished": best["finished"],
+                "decode_steps": best["decode_steps"],
+                "generated_tokens": best["generated_tokens"],
+                "tokens_per_s": best["tokens_per_s"],
+                "ttft_p50_s": best["p50_ttft_s"],
+                "ttft_p99_s": best["p99_ttft_s"],
+                "itl_p50_s": best["p50_itl_s"],
+                "itl_p99_s": best["p99_itl_s"],
+                "warm_measurements": (best["autotune"] or {}).get(
+                    "measurements"),
+                "greedy_agreement": agreement,
+                "preemptions": best["preemptions"],
+                "wall_s": best["wall_s"],
+            })
+    return rows
+
+
 def bench_spec(arch: str, spec_k: int, n_requests: int, n_lanes: int,
                max_len: int, max_new: int, page_size: int,
                seed: int = 0) -> dict:
@@ -541,6 +639,10 @@ def main() -> None:
                     help="chunk size for the mixed-workload chunked cells")
     ap.add_argument("--long-len", type=int, default=48,
                     help="long-prompt length in the mixed workload")
+    ap.add_argument("--long-lens", type=int, nargs="+", default=[32, 64],
+                    help="prompt-length sweep for the long_context "
+                         "split-KV cells (committed vs forced-1, one "
+                         "cell pair per length)")
     ap.add_argument("--spec-ks", type=int, nargs="+", default=[1, 4],
                     help="draft lengths for the speculative cells "
                          "(one cell per k)")
@@ -644,6 +746,21 @@ def main() -> None:
                   f"short-ttft p50 {fmt(row['ttft_short_p50_s'], '.3f')}s  "
                   f"long ttft {fmt(row['ttft_long_s'], '.3f')}s  "
                   f"{row['tokens_per_s']:6.1f} tok/s")
+        # long-context decode: split-KV committed (autotuned ladder) vs
+        # forced num_splits=1 (the sequential spelling), 1 lane so p50
+        # ITL is a single decode step's critical path.  compare.py gates
+        # agreement at 100% and committed ITL <= forced-1 per length.
+        for ll in args.long_lens:
+            for row in bench_long_context(arch, ll, args.requests,
+                                          args.max_new, args.page_size,
+                                          args.repeats):
+                results.append(row)
+                mode = f"ns={row['num_splits']}"
+                print(f"[bench_serving] {arch:14s} paged  "
+                      f"long/{ll:<4d}{mode:8s} "
+                      f"itl p50 {fmt(row['itl_p50_s'], '.4f')}s  "
+                      f"{row['tokens_per_s']:6.1f} tok/s  "
+                      f"agree {row['greedy_agreement']:.0%}")
         # shared system prompt: prefix cache off vs on.  The cached cell
         # must show a TTFT drop (admissions skip the prefix's chunks)
         # and a nonzero hit rate (gated by compare.py).  One lane, so
@@ -712,6 +829,8 @@ def main() -> None:
               "mesh": args.mesh,
               "prefill_chunk": args.prefill_chunk,
               "long_len": args.long_len, "spec_ks": list(args.spec_ks),
+              "long_lens": list(args.long_lens),
+              "split_modes": [1, "auto"],
               "prefix_len": args.prefix_len,
               "gateway_requests": args.gateway_requests,
               "gateway_rate": args.gateway_rate,

@@ -1,8 +1,9 @@
 """Serving-bench regression gate: current run vs committed baseline.
 
 Compares two ``BENCH_serving.json`` payloads cell by cell (cells are
-keyed by arch x cache x workload x prefill_chunk) and fails when the
-current run regresses past the thresholds:
+keyed by arch x cache x workload x the per-workload mode columns:
+prefill_chunk, spec_k, prefix_cache, kv_dtype, mesh, num_splits,
+long_len) and fails when the current run regresses past the thresholds:
 
 * throughput (``tokens_per_s``) drops by more than ``--max-tps-drop``
   (default 20%);
@@ -22,7 +23,19 @@ current run regresses past the thresholds:
   at its fixed byte budget) drops below the baseline's — quantized pages
   stopped buying capacity — or its ``greedy_agreement`` (token-level
   match against the fp cell) falls by more than ``--max-agreement-drop``
-  (default 5 points) — quantization started corrupting outputs.
+  (default 5 points) — quantization started corrupting outputs;
+* a long_context cell's ``greedy_agreement`` (the committed split-KV
+  run's token-level match against the forced ``num_splits=1`` run)
+  falls below 100% — the two-phase combine must reproduce the
+  sequential kernel's greedy tokens exactly — or its ``itl_p50_s``
+  rises past ``--max-itl-rise`` over the baseline (plus the
+  ``--itl-floor`` jitter slack); long_context cells are exempt from the
+  generic throughput gate — they keep their min-ITL repeat, and at one
+  lane their tokens/s is mostly prefill wall;
+* within the *current* payload, a long_context pair where the
+  committed-splits cell's p50 ITL sits above the forced-sequential
+  cell's past the same rise/floor allowance — the tuner committed a
+  split degree slower than the kernel it replaced.
 
 An absolute TTFT slack (``--ttft-floor``, default 50 ms) absorbs
 scheduler jitter on cells whose TTFT is tiny: a rise only fails the gate
@@ -71,13 +84,15 @@ def cell_key(row: dict) -> tuple:
         row.get("prefix_cache"),
         row.get("kv_dtype"),
         row.get("mesh"),
+        row.get("num_splits"),
+        row.get("long_len"),
     )
 
 
 def _fmt_key(key: tuple) -> str:
-    if len(key) != 8:  # malformed row: show it verbatim, don't traceback
+    if len(key) != 10:  # malformed row: show it verbatim, don't traceback
         return repr(key)
-    arch, cache, workload, chunk, spec_k, prefix_cache, kv_dtype, mesh = key
+    arch, cache, workload, chunk, spec_k, prefix_cache, kv_dtype, mesh, num_splits, long_len = key
     mode = f"/chunk={chunk}" if chunk else ""
     if spec_k is not None:
         mode += f"/k={spec_k}"
@@ -87,6 +102,10 @@ def _fmt_key(key: tuple) -> str:
         mode += f"/kv={kv_dtype}"
     if mesh is not None:
         mode += f"/mesh={mesh}"
+    if long_len is not None:
+        mode += f"/len={long_len}"
+    if num_splits is not None:
+        mode += f"/ns={num_splits}"
     return f"{arch}:{cache}:{workload}{mode}"
 
 
@@ -132,6 +151,43 @@ def config_mismatch(base_cfg: dict, cur_cfg: dict) -> list[str]:
     return sorted(k for k in keys if base_cfg.get(k) != cur_cfg.get(k))
 
 
+def split_itl_regressions(
+    current: dict[tuple, dict],
+    max_itl_rise: float = 0.25,
+    itl_floor_s: float = 0.025,
+) -> list[str]:
+    """Within-payload gate on the long_context cell pairs: at each
+    (arch, long_len) the committed-splits cell's p50 ITL must not sit
+    above the forced-sequential cell's past the jitter allowance.  The
+    tuner may *commit* ``num_splits=1`` when splitting doesn't pay, but
+    it must never commit a split degree that makes decode slower than
+    the kernel it replaced."""
+    failures: list[str] = []
+    pairs: dict[tuple, dict] = {}
+    for row in current.values():
+        if row.get("workload") != "long_context":
+            continue
+        pair = (row.get("arch"), row.get("long_len"))
+        pairs.setdefault(pair, {})[str(row.get("num_splits"))] = row
+    for (arch, long_len), modes in sorted(pairs.items(), key=str):
+        seq, auto = modes.get("1"), modes.get("auto")
+        if seq is None or auto is None:
+            continue
+        b_itl, c_itl = seq.get("itl_p50_s"), auto.get("itl_p50_s")
+        if not b_itl or c_itl is None or c_itl <= b_itl + itl_floor_s:
+            continue
+        rise = (c_itl - b_itl) / b_itl
+        if rise > max_itl_rise:
+            failures.append(
+                f"{arch}:paged:long_context/len={long_len}: committed "
+                f"split-KV p50 ITL sits {rise:.0%} above the forced "
+                f"num_splits=1 cell ({b_itl:.4f}s -> {c_itl:.4f}s; "
+                f"limit {max_itl_rise:.0%}) — the tuner committed a "
+                f"split degree slower than the sequential kernel"
+            )
+    return failures
+
+
 def compare(
     baseline: dict[tuple, dict],
     current: dict[tuple, dict],
@@ -139,6 +195,8 @@ def compare(
     max_ttft_rise: float = 0.25,
     ttft_floor_s: float = 0.05,
     max_agreement_drop: float = 0.05,
+    max_itl_rise: float = 0.25,
+    itl_floor_s: float = 0.025,
 ) -> list[str]:
     """Return the list of failure messages (empty == gate passes)."""
     failures: list[str] = []
@@ -148,8 +206,11 @@ def compare(
         if cur is None:
             failures.append(f"{name}: cell missing from current run")
             continue
+        # long_context cells keep their min-ITL repeat, not best-of-tps,
+        # and at 1 lane their tokens/s is mostly prefill wall — their
+        # gates are the ITL pair + agreement checks below instead
         b_tps, c_tps = base.get("tokens_per_s"), cur.get("tokens_per_s")
-        if b_tps and c_tps is not None:
+        if b_tps and c_tps is not None and cur.get("workload") != "long_context":
             drop = (b_tps - c_tps) / b_tps
             if drop > max_tps_drop:
                 failures.append(
@@ -217,6 +278,29 @@ def compare(
                 f"single-device greedy truth (agreement {c_agr:.1%}; the "
                 f"sharded dispatch must be bit-identical)"
             )
+        # long_context cells carry the split-KV invariants: the
+        # committed-splits run must agree with the forced-sequential
+        # outputs exactly (the combine is exact up to fp32 rounding and
+        # greedy argmax must not flip), and its per-step latency — the
+        # number the split axis exists to shorten — must not regress
+        # against the baseline past the jitter allowance
+        if cur.get("workload") == "long_context":
+            if c_agr is not None and c_agr < 1.0:
+                failures.append(
+                    f"{name}: split-KV outputs diverged from the "
+                    f"forced num_splits=1 greedy truth (agreement "
+                    f"{c_agr:.1%}; the two-phase combine must "
+                    f"reproduce the sequential kernel's tokens)"
+                )
+            b_itl, c_itl = base.get("itl_p50_s"), cur.get("itl_p50_s")
+            if b_itl and c_itl is not None and c_itl > b_itl + itl_floor_s:
+                rise = (c_itl - b_itl) / b_itl
+                if rise > max_itl_rise:
+                    failures.append(
+                        f"{name}: p50 ITL rose {rise:.0%} "
+                        f"({b_itl:.4f}s -> {c_itl:.4f}s; limit {max_itl_rise:.0%})"
+                    )
+    failures.extend(split_itl_regressions(current, max_itl_rise, itl_floor_s))
     return failures
 
 
@@ -247,6 +331,18 @@ def main() -> None:
         type=float,
         default=0.05,
         help="max allowed drop in a kv_dtype cell's greedy agreement",
+    )
+    ap.add_argument(
+        "--max-itl-rise",
+        type=float,
+        default=0.25,
+        help="max allowed fractional p50-ITL rise on long_context cells",
+    )
+    ap.add_argument(
+        "--itl-floor",
+        type=float,
+        default=0.025,
+        help="absolute p50-ITL slack in seconds (long_context jitter floor)",
     )
     args = ap.parse_args()
 
@@ -287,6 +383,8 @@ def main() -> None:
         args.max_ttft_rise,
         args.ttft_floor,
         args.max_agreement_drop,
+        args.max_itl_rise,
+        args.itl_floor,
     )
     compared = len(set(baseline) & set(current))
     if failures:

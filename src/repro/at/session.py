@@ -399,7 +399,13 @@ class AutoTuner:
             region = self.ctx.registry.get(name)
             pp_name = region.pp_names[0] if region.pp_names \
                 else f"{name}_SELECT"
-            self.records.put("dynamic", name, {}, {pp_name: st.committed},
+            # OAT_NUMALT stamps the record with the size of the variant
+            # space the winner index is valid against: a later session
+            # whose region has grown (e.g. a new num_splits axis) must
+            # re-measure instead of committing a stale index
+            self.records.put("dynamic", name, {},
+                             {pp_name: st.committed,
+                              "OAT_NUMALT": len(region.subregions)},
                              cost=st.tried.get(st.committed))
             self._dynamic_persisted.add(name)
             self._publish_region(region)
@@ -526,7 +532,16 @@ class AutoTuner:
             st = self.ctx.dynamic_state.get(name)
             if st is None or st.committed is not None:
                 continue
-            pp_name, idx = next(iter(rec.pp.items()))
+            pp = dict(rec.pp)
+            n_alt = pp.pop("OAT_NUMALT", None)
+            if not pp:
+                continue
+            if n_alt is not None and int(n_alt) != len(region.subregions):
+                # the variant space grew/shrank since this winner was
+                # recorded (its index means something else now): fall
+                # through to a cold re-measure of just this region
+                continue
+            pp_name, idx = next(iter(pp.items()))
             st.committed = int(idx)
             self.ctx.store.set_pp(pp_name, int(idx), "dynamic")
             self._dynamic_persisted.add(name)

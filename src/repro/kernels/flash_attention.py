@@ -25,6 +25,7 @@ The kernels:
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -251,6 +252,92 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# split-KV support (Flash-Decoding two-phase): shared helpers
+# --------------------------------------------------------------------------
+
+
+def _resolve_block_k(block_k: int | None, page_size: int,
+                     kernel_name: str) -> tuple[int, int]:
+    """Resolve the split-K tile within a page: (block_k, sub_blocks).
+
+    The tile must divide ``page_size`` exactly; a non-divisor request is
+    coerced to the whole page *with a warning* (it used to be discarded
+    silently, which hid tuned values the AT layer thought it had
+    committed).  Candidate grids should be pre-filtered with
+    :func:`repro.tuning.dynamic.divisor_block_ks` so this never fires in
+    a tuned run.
+    """
+    bk = min(block_k, page_size) if block_k else page_size
+    if page_size % bk:
+        warnings.warn(
+            f"{kernel_name}: requested block_k={block_k} does not divide "
+            f"page_size={page_size}; falling back to block_k={page_size} "
+            "(whole page) — filter candidates to divisors of page_size",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        bk = page_size
+    return bk, page_size // bk
+
+
+def _split_combine_kernel(m_ref, l_ref, acc_ref, o_ref):
+    """Phase 2 of split-KV attention: merge per-split partial softmax
+    states with the standard max-shift rescale, then normalize.
+
+    Blocks: m, l (1, 1, ns, rows); acc (1, 1, ns, rows, d); out
+    (1, 1, rows, d).  An empty split carries (m=NEG_INF, l=0, acc=0):
+    its rescale weight exp(NEG_INF - m*) underflows to exactly 0.0, so
+    it contributes nothing; if *every* split is empty the l* == 0 guard
+    reproduces the sequential kernel's zero output.
+    """
+    m = m_ref[0, 0]                                  # (ns, rows)
+    l = l_ref[0, 0]                                  # (ns, rows)
+    acc = acc_ref[0, 0]                              # (ns, rows, d)
+    m_star = m.max(axis=0, keepdims=True)            # (1, rows)
+    alpha = jnp.exp(m - m_star)                      # (ns, rows)
+    l_star = (l * alpha).sum(axis=0, keepdims=True)  # (1, rows)
+    acc_star = (acc * alpha[..., None]).sum(axis=0)  # (rows, d)
+    l_star = jnp.where(l_star == 0.0, 1.0, l_star)
+    o_ref[0, 0] = (acc_star / l_star[0][:, None]).astype(o_ref.dtype)
+
+
+def _combine_splits(m: jax.Array, l: jax.Array, acc: jax.Array,
+                    out_dtype, interpret: bool) -> jax.Array:
+    """Run the combine kernel over canonical partial-state arrays.
+
+    m, l: (B, R, ns, rows) fp32; acc: (B, R, ns, rows, d) fp32, where R
+    is whatever the phase-1 grid parallelised over besides batch (kv
+    heads for decode, head x q-tile for prefill).  Returns
+    (B, R, rows, d) in ``out_dtype``.
+    """
+    bb, rr, ns, rows = m.shape
+    d = acc.shape[-1]
+    return pl.pallas_call(
+        _split_combine_kernel,
+        grid=(bb, rr),
+        in_specs=[
+            pl.BlockSpec((1, 1, ns, rows), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, ns, rows), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, ns, rows, d),
+                         lambda i, j: (i, j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bb, rr, rows, d), out_dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(m, l, acc)
+
+
+def _num_splits(num_splits: int | None, n_steps: int) -> tuple[int, int]:
+    """Clamp the requested parallelism degree to the actual KV walk and
+    return (n_splits, steps_per_split).  1 selects the single-phase
+    (sequential) kernel — the legacy spelling."""
+    ns = max(1, min(int(num_splits or 1), n_steps))
+    return ns, -(-n_steps // ns)
+
+
+# --------------------------------------------------------------------------
 # paged decode: one query token against a paged (block) KV cache
 # --------------------------------------------------------------------------
 
@@ -294,11 +381,60 @@ def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "scale",
-                                             "interpret"))
+def _paged_decode_split_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                               m_out, l_out, acc_out, m_ref, l_ref,
+                               acc_ref, *, scale: float, block_k: int,
+                               n_steps: int, steps_per_split: int):
+    """Phase 1 of split-KV decode: each split walks its own contiguous
+    segment of the page-table and emits partial (m, l, acc) state.  The
+    split axis is a *parallel* grid dimension — this is what breaks the
+    long serial KV walk that dominates 1-lane long-context ITL."""
+    b = pl.program_id(0)
+    isp, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    ik = isp * steps_per_split + j
+    k_start = ik * block_k
+
+    # ik >= n_steps happens only in the ragged last split (ceil-divided
+    # segments); its tiles load a redundant clamped page and are masked
+    @pl.when(jnp.logical_and(ik < n_steps, k_start < kv_len))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == steps_per_split - 1)
+    def _done():
+        m_out[0, 0, 0] = m_ref[...][:, 0]
+        l_out[0, 0, 0] = l_ref[...][:, 0]
+        acc_out[0, 0, 0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "num_splits",
+                                             "scale", "interpret"))
 def flash_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                        page_table: jax.Array, kv_len: jax.Array, *,
                        block_k: int | None = None,
+                       num_splits: int | None = None,
                        scale: float | None = None,
                        interpret: bool = False) -> jax.Array:
     """Decode attention over a paged KV cache (vLLM-style PagedAttention).
@@ -314,7 +450,9 @@ def flash_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     ``block_k`` is the split-K tile *within* a page (the run-time-AT
     performance parameter of this kernel): it must divide ``page_size``
     and defaults to the whole page; smaller tiles trade more grid steps
-    for less VMEM per step.
+    for less VMEM per step.  ``num_splits`` partitions the KV walk into
+    that many *parallel* segments (Flash-Decoding two-phase); 1 (the
+    default) is the single-phase sequential kernel.
     """
     b, h, one, d = q.shape
     n_pages, hkv, psz, _ = k_pool.shape
@@ -322,42 +460,93 @@ def flash_paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     g = h // hkv
     nblk = page_table.shape[1]
     scale = float(scale if scale is not None else d ** -0.5)
-    bk = min(block_k, psz) if block_k else psz
-    if psz % bk:
-        bk = psz                     # block must tile the page exactly
-    sub = psz // bk                  # sub-blocks per page
+    bk, sub = _resolve_block_k(block_k, psz, "flash_paged_decode")
     qg = q.reshape(b, hkv, g, d)
-    grid = (b, hkv, nblk * sub)
-    kernel = functools.partial(_paged_decode_kernel, scale=scale,
-                               block_k=bk, n_blk=grid[2])
+    n_steps = nblk * sub
+    ns, sps = _num_splits(num_splits, n_steps)
+    if ns == 1:
+        grid = (b, hkv, n_steps)
+        kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                                   block_k=bk, n_blk=grid[2])
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda bb, hh, ik, tbl, ln, s=sub:
+                             (tbl[bb, ik // s], hh, ik % s, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda bb, hh, ik, tbl, ln, s=sub:
+                             (tbl[bb, ik // s], hh, ik % s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bb, hh, ik, tbl, ln:
+                                   (bb, hh, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                            pltpu.VMEM((g, 1), jnp.float32),
+                            pltpu.VMEM((g, d), jnp.float32)],
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
+          qg, k_pool, v_pool)
+        return out.reshape(b, h, 1, d)
+
+    grid = (b, hkv, ns, sps)
+    kernel = functools.partial(_paged_decode_split_kernel, scale=scale,
+                               block_k=bk, n_steps=n_steps,
+                               steps_per_split=sps)
+
+    def kv_idx(bb, hh, isp, j, tbl, ln, s=sub, sp=sps, n=n_steps):
+        ik = jnp.minimum(isp * sp + j, n - 1)
+        return (tbl[bb, ik // s], hh, ik % s, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, g, d),
-                         lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
-            pl.BlockSpec((1, 1, bk, d),
-                         lambda bb, hh, ik, tbl, ln, s=sub:
-                         (tbl[bb, ik // s], hh, ik % s, 0)),
-            pl.BlockSpec((1, 1, bk, d),
-                         lambda bb, hh, ik, tbl, ln, s=sub:
-                         (tbl[bb, ik // s], hh, ik % s, 0)),
+                         lambda bb, hh, isp, j, tbl, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda bb, hh, isp, j, tbl, ln:
+                         (bb, hh, isp, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda bb, hh, isp, j, tbl, ln:
+                         (bb, hh, isp, 0)),
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda bb, hh, isp, j, tbl, ln:
+                         (bb, hh, isp, 0, 0)),
+        ],
         scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, d), jnp.float32)],
     )
-    out = pl.pallas_call(
+    pm, pll, pacc = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, ns, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
+        ],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
       qg, k_pool, v_pool)
+    out = _combine_splits(pm, pll, pacc, q.dtype, interpret)
     return out.reshape(b, h, 1, d)
 
 
@@ -415,12 +604,72 @@ def _paged_prefill_kernel(tbl_ref, start_ref, len_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+def _paged_prefill_split_kernel(tbl_ref, start_ref, len_ref, q_ref, k_ref,
+                                v_ref, m_out, l_out, acc_out, m_ref, l_ref,
+                                acc_ref, *, scale: float, block_q: int,
+                                block_k: int, n_steps: int,
+                                steps_per_split: int):
+    """Phase 1 of split-KV prefill/verify: the KV walk for each q tile is
+    partitioned into parallel segments emitting partial (m, l, acc).
+    Partials for (q-tile iq, split isp) land at folded row iq*ns+isp so
+    the outputs stay <= 5-D."""
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    isp, j = pl.program_id(3), pl.program_id(4)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    q_start = start_ref[b] + iq * block_q     # absolute pos of q row 0
+    ik = isp * steps_per_split + j
+    k_start = ik * block_k
+
+    live = jnp.logical_and(
+        ik < n_steps,
+        jnp.logical_and(k_start < kv_len,
+                        k_start <= q_start + block_q - 1))
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+        mask = (kj <= qi) & (kj < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == steps_per_split - 1)
+    def _done():
+        m_out[0, 0, 0] = m_ref[...][:, 0]
+        l_out[0, 0, 0] = l_ref[...][:, 0]
+        acc_out[0, 0, 0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "num_splits", "scale",
                                              "interpret"))
 def flash_paged_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         page_table: jax.Array, start: jax.Array,
                         kv_len: jax.Array, *, block_q: int = 128,
                         block_k: int | None = None,
+                        num_splits: int | None = None,
                         scale: float | None = None,
                         interpret: bool = False) -> jax.Array:
     """Chunked-prefill attention over a paged KV cache.
@@ -439,7 +688,8 @@ def flash_paged_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
     Performance parameters (the prefill region's run-time AT space):
     ``block_q`` tiles the chunk, ``block_k`` the split-K tile *within* a
-    page (must divide ``page_size``; defaults to the whole page).
+    page (must divide ``page_size``; defaults to the whole page),
+    ``num_splits`` the parallel split-KV degree (1 = sequential walk).
     """
     b, h, c, d = q.shape
     n_pages, hkv, psz, _ = k_pool.shape
@@ -451,45 +701,102 @@ def flash_paged_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     if pq:                       # pad the chunk to a whole q tile; padded
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))   # rows discard
     cp = q.shape[2]
-    bk = min(block_k, psz) if block_k else psz
-    if psz % bk:
-        bk = psz                 # block must tile the page exactly
-    sub = psz // bk              # sub-blocks per page
-    grid = (b, h, cp // bq, nblk * sub)
-    kernel = functools.partial(_paged_prefill_kernel, scale=scale,
-                               block_q=bq, block_k=bk, n_k=grid[3])
+    bk, sub = _resolve_block_k(block_k, psz, "flash_paged_prefill")
+    n_steps = nblk * sub
+    nq = cp // bq
+    ns, sps = _num_splits(num_splits, n_steps)
+    if ns == 1:
+        grid = (b, h, nq, n_steps)
+        kernel = functools.partial(_paged_prefill_kernel, scale=scale,
+                                   block_q=bq, block_k=bk, n_k=grid[3])
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d),
+                             lambda bb, hh, iq, ik, tbl, st, ln:
+                             (bb, hh, iq, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+                             (tbl[bb, ik // s], hh // g, ik % s, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+                             (tbl[bb, ik // s], hh // g, ik % s, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, d),
+                                   lambda bb, hh, iq, ik, tbl, st, ln:
+                                   (bb, hh, iq, 0)),
+            scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                            pltpu.VMEM((bq, 1), jnp.float32),
+                            pltpu.VMEM((bq, d), jnp.float32)],
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, h, cp, d), q.dtype),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel",
+                                     "arbitrary")),
+            interpret=interpret,
+        )(page_table.astype(jnp.int32), start.astype(jnp.int32),
+          kv_len.astype(jnp.int32), q, k_pool, v_pool)
+        return out[:, :, :c, :]
+
+    grid = (b, h, nq, ns, sps)
+    kernel = functools.partial(_paged_prefill_split_kernel, scale=scale,
+                               block_q=bq, block_k=bk, n_steps=n_steps,
+                               steps_per_split=sps)
+
+    def kv_idx(bb, hh, iq, isp, j, tbl, st, ln, g=g, s=sub, sp=sps,
+               n=n_steps):
+        ik = jnp.minimum(isp * sp + j, n - 1)
+        return (tbl[bb, ik // s], hh // g, ik % s, 0)
+
+    def row_idx(bb, hh, iq, isp, j, tbl, st, ln, ns=ns):
+        return (bb, hh, iq * ns + isp, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, d),
-                         lambda bb, hh, iq, ik, tbl, st, ln:
+                         lambda bb, hh, iq, isp, j, tbl, st, ln:
                          (bb, hh, iq, 0)),
-            pl.BlockSpec((1, 1, bk, d),
-                         lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
-                         (tbl[bb, ik // s], hh // g, ik % s, 0)),
-            pl.BlockSpec((1, 1, bk, d),
-                         lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
-                         (tbl[bb, ik // s], hh // g, ik % s, 0)),
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, d),
-                               lambda bb, hh, iq, ik, tbl, st, ln:
-                               (bb, hh, iq, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, bq), row_idx),
+            pl.BlockSpec((1, 1, 1, bq), row_idx),
+            pl.BlockSpec((1, 1, 1, bq, d),
+                         lambda bb, hh, iq, isp, j, tbl, st, ln, ns=ns:
+                         (bb, hh, iq * ns + isp, 0, 0)),
+        ],
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, d), jnp.float32)],
     )
-    out = pl.pallas_call(
+    pm, pll, pacc = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, cp, d), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nq * ns, bq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nq * ns, bq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nq * ns, bq, d), jnp.float32),
+        ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
+                                 "parallel", "arbitrary")),
         interpret=interpret,
     )(page_table.astype(jnp.int32), start.astype(jnp.int32),
       kv_len.astype(jnp.int32), q, k_pool, v_pool)
-    return out[:, :, :c, :]
+    # fold (h, nq) into the combine's R axis; the nq*ns rows are laid out
+    # q-tile-major so a plain reshape separates them
+    out = _combine_splits(pm.reshape(b, h * nq, ns, bq),
+                          pll.reshape(b, h * nq, ns, bq),
+                          pacc.reshape(b, h * nq, ns, bq, d),
+                          q.dtype, interpret)
+    return out.reshape(b, h, cp, d)[:, :, :c, :]
 
 
 # --------------------------------------------------------------------------
@@ -540,13 +847,59 @@ def _paged_decode_quant_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "scale",
-                                             "interpret"))
+def _paged_decode_split_quant_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                                     ks_ref, vs_ref, m_out, l_out, acc_out,
+                                     m_ref, l_ref, acc_ref, *, scale: float,
+                                     block_k: int, n_steps: int,
+                                     steps_per_split: int):
+    """Split-KV phase 1 over int8 pools — dequant stays in-kernel right
+    next to the tile load, exactly as in the sequential quant kernel."""
+    b = pl.program_id(0)
+    isp, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    ik = isp * steps_per_split + j
+    k_start = ik * block_k
+
+    @pl.when(jnp.logical_and(ik < n_steps, k_start < kv_len))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, d)
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == steps_per_split - 1)
+    def _done():
+        m_out[0, 0, 0] = m_ref[...][:, 0]
+        l_out[0, 0, 0] = l_ref[...][:, 0]
+        acc_out[0, 0, 0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "num_splits",
+                                             "scale", "interpret"))
 def flash_paged_decode_quant(q: jax.Array, k_pool: jax.Array,
                              v_pool: jax.Array, k_scale: jax.Array,
                              v_scale: jax.Array, page_table: jax.Array,
                              kv_len: jax.Array, *,
                              block_k: int | None = None,
+                             num_splits: int | None = None,
                              scale: float | None = None,
                              interpret: bool = False) -> jax.Array:
     """:func:`flash_paged_decode` over int8 pools.
@@ -563,46 +916,103 @@ def flash_paged_decode_quant(q: jax.Array, k_pool: jax.Array,
     g = h // hkv
     nblk = page_table.shape[1]
     scale = float(scale if scale is not None else d ** -0.5)
-    bk = min(block_k, psz) if block_k else psz
-    if psz % bk:
-        bk = psz                     # block must tile the page exactly
-    sub = psz // bk                  # sub-blocks per page
+    bk, sub = _resolve_block_k(block_k, psz, "flash_paged_decode_quant")
     qg = q.reshape(b, hkv, g, d)
-    grid = (b, hkv, nblk * sub)
-    kernel = functools.partial(_paged_decode_quant_kernel, scale=scale,
-                               block_k=bk, n_blk=grid[2])
-    pool_spec = pl.BlockSpec((1, 1, bk, d),
-                             lambda bb, hh, ik, tbl, ln, s=sub:
-                             (tbl[bb, ik // s], hh, ik % s, 0))
-    scale_spec = pl.BlockSpec((1, 1, bk),
-                              lambda bb, hh, ik, tbl, ln, s=sub:
-                              (tbl[bb, ik // s], hh, ik % s))
+    n_steps = nblk * sub
+    ns, sps = _num_splits(num_splits, n_steps)
+    if ns == 1:
+        grid = (b, hkv, n_steps)
+        kernel = functools.partial(_paged_decode_quant_kernel, scale=scale,
+                                   block_k=bk, n_blk=grid[2])
+        pool_spec = pl.BlockSpec((1, 1, bk, d),
+                                 lambda bb, hh, ik, tbl, ln, s=sub:
+                                 (tbl[bb, ik // s], hh, ik % s, 0))
+        scale_spec = pl.BlockSpec((1, 1, bk),
+                                  lambda bb, hh, ik, tbl, ln, s=sub:
+                                  (tbl[bb, ik // s], hh, ik % s))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+                pool_spec,
+                pool_spec,
+                scale_spec,
+                scale_spec,
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bb, hh, ik, tbl, ln:
+                                   (bb, hh, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                            pltpu.VMEM((g, 1), jnp.float32),
+                            pltpu.VMEM((g, d), jnp.float32)],
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
+          qg, k_pool, v_pool, k_scale, v_scale)
+        return out.reshape(b, h, 1, d)
+
+    grid = (b, hkv, ns, sps)
+    kernel = functools.partial(_paged_decode_split_quant_kernel,
+                               scale=scale, block_k=bk, n_steps=n_steps,
+                               steps_per_split=sps)
+
+    def kv_idx(bb, hh, isp, j, tbl, ln, s=sub, sp=sps, n=n_steps):
+        ik = jnp.minimum(isp * sp + j, n - 1)
+        return (tbl[bb, ik // s], hh, ik % s, 0)
+
+    def sc_idx(bb, hh, isp, j, tbl, ln, s=sub, sp=sps, n=n_steps):
+        ik = jnp.minimum(isp * sp + j, n - 1)
+        return (tbl[bb, ik // s], hh, ik % s)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, g, d),
-                         lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
-            pool_spec,
-            pool_spec,
-            scale_spec,
-            scale_spec,
+                         lambda bb, hh, isp, j, tbl, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
+            pl.BlockSpec((1, 1, bk), sc_idx),
+            pl.BlockSpec((1, 1, bk), sc_idx),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda bb, hh, ik, tbl, ln: (bb, hh, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda bb, hh, isp, j, tbl, ln:
+                         (bb, hh, isp, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda bb, hh, isp, j, tbl, ln:
+                         (bb, hh, isp, 0)),
+            pl.BlockSpec((1, 1, 1, g, d),
+                         lambda bb, hh, isp, j, tbl, ln:
+                         (bb, hh, isp, 0, 0)),
+        ],
         scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, d), jnp.float32)],
     )
-    out = pl.pallas_call(
+    pm, pll, pacc = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, ns, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
+        ],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
       qg, k_pool, v_pool, k_scale, v_scale)
+    out = _combine_splits(pm, pll, pacc, q.dtype, interpret)
     return out.reshape(b, h, 1, d)
 
 
@@ -654,7 +1064,64 @@ def _paged_prefill_quant_kernel(tbl_ref, start_ref, len_ref, q_ref, k_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+def _paged_prefill_split_quant_kernel(tbl_ref, start_ref, len_ref, q_ref,
+                                      k_ref, v_ref, ks_ref, vs_ref, m_out,
+                                      l_out, acc_out, m_ref, l_ref,
+                                      acc_ref, *, scale: float,
+                                      block_q: int, block_k: int,
+                                      n_steps: int, steps_per_split: int):
+    """Split-KV phase 1 for prefill/verify over int8 pools."""
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    isp, j = pl.program_id(3), pl.program_id(4)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    q_start = start_ref[b] + iq * block_q     # absolute pos of q row 0
+    ik = isp * steps_per_split + j
+    k_start = ik * block_k
+
+    live = jnp.logical_and(
+        ik < n_steps,
+        jnp.logical_and(k_start < kv_len,
+                        k_start <= q_start + block_q - 1))
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+        mask = (kj <= qi) & (kj < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == steps_per_split - 1)
+    def _done():
+        m_out[0, 0, 0] = m_ref[...][:, 0]
+        l_out[0, 0, 0] = l_ref[...][:, 0]
+        acc_out[0, 0, 0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "num_splits", "scale",
                                              "interpret"))
 def flash_paged_prefill_quant(q: jax.Array, k_pool: jax.Array,
                               v_pool: jax.Array, k_scale: jax.Array,
@@ -662,6 +1129,7 @@ def flash_paged_prefill_quant(q: jax.Array, k_pool: jax.Array,
                               start: jax.Array, kv_len: jax.Array, *,
                               block_q: int = 128,
                               block_k: int | None = None,
+                              num_splits: int | None = None,
                               scale: float | None = None,
                               interpret: bool = False) -> jax.Array:
     """:func:`flash_paged_prefill` over int8 pools (verify rides this too).
@@ -680,49 +1148,113 @@ def flash_paged_prefill_quant(q: jax.Array, k_pool: jax.Array,
     if pq:                       # pad the chunk to a whole q tile; padded
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))   # rows discard
     cp = q.shape[2]
-    bk = min(block_k, psz) if block_k else psz
-    if psz % bk:
-        bk = psz                 # block must tile the page exactly
-    sub = psz // bk              # sub-blocks per page
-    grid = (b, h, cp // bq, nblk * sub)
-    kernel = functools.partial(_paged_prefill_quant_kernel, scale=scale,
-                               block_q=bq, block_k=bk, n_k=grid[3])
-    pool_spec = pl.BlockSpec((1, 1, bk, d),
-                             lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
-                             (tbl[bb, ik // s], hh // g, ik % s, 0))
-    scale_spec = pl.BlockSpec((1, 1, bk),
-                              lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
-                              (tbl[bb, ik // s], hh // g, ik % s))
+    bk, sub = _resolve_block_k(block_k, psz, "flash_paged_prefill_quant")
+    n_steps = nblk * sub
+    nq = cp // bq
+    ns, sps = _num_splits(num_splits, n_steps)
+    if ns == 1:
+        grid = (b, h, nq, n_steps)
+        kernel = functools.partial(_paged_prefill_quant_kernel, scale=scale,
+                                   block_q=bq, block_k=bk, n_k=grid[3])
+        pool_spec = pl.BlockSpec(
+            (1, 1, bk, d),
+            lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+            (tbl[bb, ik // s], hh // g, ik % s, 0))
+        scale_spec = pl.BlockSpec(
+            (1, 1, bk),
+            lambda bb, hh, iq, ik, tbl, st, ln, g=g, s=sub:
+            (tbl[bb, ik // s], hh // g, ik % s))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d),
+                             lambda bb, hh, iq, ik, tbl, st, ln:
+                             (bb, hh, iq, 0)),
+                pool_spec,
+                pool_spec,
+                scale_spec,
+                scale_spec,
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, d),
+                                   lambda bb, hh, iq, ik, tbl, st, ln:
+                                   (bb, hh, iq, 0)),
+            scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                            pltpu.VMEM((bq, 1), jnp.float32),
+                            pltpu.VMEM((bq, d), jnp.float32)],
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, h, cp, d), q.dtype),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel",
+                                     "arbitrary")),
+            interpret=interpret,
+        )(page_table.astype(jnp.int32), start.astype(jnp.int32),
+          kv_len.astype(jnp.int32), q, k_pool, v_pool, k_scale, v_scale)
+        return out[:, :, :c, :]
+
+    grid = (b, h, nq, ns, sps)
+    kernel = functools.partial(_paged_prefill_split_quant_kernel,
+                               scale=scale, block_q=bq, block_k=bk,
+                               n_steps=n_steps, steps_per_split=sps)
+
+    def kv_idx(bb, hh, iq, isp, j, tbl, st, ln, g=g, s=sub, sp=sps,
+               n=n_steps):
+        ik = jnp.minimum(isp * sp + j, n - 1)
+        return (tbl[bb, ik // s], hh // g, ik % s, 0)
+
+    def sc_idx(bb, hh, iq, isp, j, tbl, st, ln, g=g, s=sub, sp=sps,
+               n=n_steps):
+        ik = jnp.minimum(isp * sp + j, n - 1)
+        return (tbl[bb, ik // s], hh // g, ik % s)
+
+    def row_idx(bb, hh, iq, isp, j, tbl, st, ln, ns=ns):
+        return (bb, hh, iq * ns + isp, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, d),
-                         lambda bb, hh, iq, ik, tbl, st, ln:
+                         lambda bb, hh, iq, isp, j, tbl, st, ln:
                          (bb, hh, iq, 0)),
-            pool_spec,
-            pool_spec,
-            scale_spec,
-            scale_spec,
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
+            pl.BlockSpec((1, 1, bk, d), kv_idx),
+            pl.BlockSpec((1, 1, bk), sc_idx),
+            pl.BlockSpec((1, 1, bk), sc_idx),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, d),
-                               lambda bb, hh, iq, ik, tbl, st, ln:
-                               (bb, hh, iq, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, bq), row_idx),
+            pl.BlockSpec((1, 1, 1, bq), row_idx),
+            pl.BlockSpec((1, 1, 1, bq, d),
+                         lambda bb, hh, iq, isp, j, tbl, st, ln, ns=ns:
+                         (bb, hh, iq * ns + isp, 0, 0)),
+        ],
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, d), jnp.float32)],
     )
-    out = pl.pallas_call(
+    pm, pll, pacc = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, cp, d), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nq * ns, bq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nq * ns, bq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nq * ns, bq, d), jnp.float32),
+        ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
+                                 "parallel", "arbitrary")),
         interpret=interpret,
     )(page_table.astype(jnp.int32), start.astype(jnp.int32),
       kv_len.astype(jnp.int32), q, k_pool, v_pool, k_scale, v_scale)
-    return out[:, :, :c, :]
+    out = _combine_splits(pm.reshape(b, h * nq, ns, bq),
+                          pll.reshape(b, h * nq, ns, bq),
+                          pacc.reshape(b, h * nq, ns, bq, d),
+                          q.dtype, interpret)
+    return out.reshape(b, h, cp, d)[:, :, :c, :]
 
 
 def attention_vmem_bytes(block_q: int, block_k: int, d: int,

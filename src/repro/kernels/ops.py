@@ -227,7 +227,8 @@ def _paged_decode_local(q, pools: PagedPools, page_table, kv_len, *,
                                     v_scale=pools.v_scale)
     kw = tuned("flash_paged_decode")
     kw.update(pps)
-    kw = {k: v for k, v in kw.items() if k in ("block_k", "scale")}
+    kw = {k: v for k, v in kw.items()
+          if k in ("block_k", "num_splits", "scale")}
     if pools.quantized:
         return flash_paged_decode_quant(q, pools.k, pools.v, pools.k_scale,
                                         pools.v_scale, page_table, kv_len,
@@ -249,7 +250,8 @@ def _paged_chunk_local(q, pools: PagedPools, page_table, start, kv_len, *,
                                      v_scale=pools.v_scale)
     kw = tuned(tuned_key)
     kw.update(pps)
-    kw = {k: v for k, v in kw.items() if k in ("block_q", "block_k", "scale")}
+    kw = {k: v for k, v in kw.items()
+          if k in ("block_q", "block_k", "num_splits", "scale")}
     if pools.quantized:
         return flash_paged_prefill_quant(q, pools.k, pools.v, pools.k_scale,
                                          pools.v_scale, page_table, start,
@@ -266,13 +268,15 @@ def paged_decode(q, pools: PagedPools, page_table, kv_len, *, mesh=None,
     kernel on TPU, the gather+oracle reference on CPU.  Tuned PPs
     published under ``flash_paged_decode`` (the serving
     ``DecodeAutoTuner`` publishes the per-bucket ``block_k`` sub-page
-    tile) flow into the kernel call; the page size itself is structural —
-    it is fixed when the pool is built, not a per-call knob.  An int8
-    ``pools`` bundle (scales present) switches both backends to the
+    tile and the split-KV ``num_splits`` parallelism degree) flow into
+    the kernel call; the page size itself is structural — it is fixed
+    when the pool is built, not a per-call knob.  An int8 ``pools``
+    bundle (scales present) switches both backends to the
     in-kernel-dequant variant.  A ``mesh`` with a multi-device ``model``
     axis runs the op under ``shard_map`` with heads partitioned
     (:func:`_head_sharded`); a 1-device mesh takes the unsharded path
-    unchanged.
+    unchanged — tuned PPs are read inside the per-shard body, so
+    ``num_splits`` splits each device's *local* head slice's KV walk.
     """
     _check_pools(pools)
     m = mesh_model_axis(mesh)

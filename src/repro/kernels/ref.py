@@ -93,6 +93,88 @@ def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return decode_ref(q, k, v, kv_len, scale)
 
 
+def combine_split_states(m: jax.Array, l: jax.Array,
+                         acc: jax.Array) -> tuple[jax.Array, jax.Array,
+                                                  jax.Array]:
+    """Merge per-split partial softmax states along the split axis.
+
+    ``m``/``l``: (..., ns, rows); ``acc``: (..., ns, rows, d) — the
+    (running max, denominator, unnormalized accumulator) triple each
+    split-KV segment emits.  Returns the merged (m*, l*, acc*) with the
+    split axis reduced: ``m* = max_i m_i``, ``l* = sum_i l_i e^{m_i-m*}``,
+    ``acc* = sum_i acc_i e^{m_i-m*}``.  This is the phase-2 math of the
+    split kernels, and the object of the combine property tests
+    (associative, order-invariant, segmentation-invariant).
+    """
+    m_star = m.max(axis=-2)                               # (..., rows)
+    alpha = jnp.exp(m - m_star[..., None, :])             # (..., ns, rows)
+    l_star = (l * alpha).sum(axis=-2)
+    acc_star = (acc * alpha[..., None]).sum(axis=-3)
+    return m_star, l_star, acc_star
+
+
+def finalize_split_states(l: jax.Array, acc: jax.Array) -> jax.Array:
+    """Normalize a merged (l, acc) pair into the attention output; the
+    ``l == 0`` guard matches the kernels' all-masked convention (output
+    exactly zero, not NaN)."""
+    l = jnp.where(l == 0.0, 1.0, l)
+    return acc / l[..., None]
+
+
+def paged_decode_split_ref(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           kv_len: jax.Array, num_splits: int,
+                           scale: float | None = None,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None) -> jax.Array:
+    """Split-aware paged decode oracle: per-segment masked softmax states
+    merged via :func:`combine_split_states` — mirrors the two-phase
+    kernel structurally (each segment computes its own running max over
+    its own keys only) instead of reusing the dense single-pass oracle.
+    """
+    b, h, one, d = q.shape
+    _, hkv, psz, _ = k_pool.shape
+    nblk = page_table.shape[1]
+    g = h // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    k_pool, v_pool = _dequantize_pools(k_pool, v_pool, k_scale, v_scale)
+    k = k_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, nblk * psz, d).astype(jnp.float32)
+    v = v_pool[page_table].transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, nblk * psz, d).astype(jnp.float32)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s_total = nblk * psz
+    seg = -(-s_total // num_splits)
+    pad = num_splits * seg - s_total
+    kj = jnp.arange(s_total)
+    valid = kj[None, :] < kv_len[:, None]                 # (B, S)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg, k) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    if pad:
+        scores = jnp.pad(scores, ((0, 0),) * 3 + ((0, pad),),
+                         constant_values=-1e30)
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    # (B, Hkv, G, ns, seg): each segment runs its own softmax state
+    ss = scores.reshape(b, hkv, g, num_splits, seg)
+    m_i = ss.max(axis=-1)                                 # (B, Hkv, G, ns)
+    p = jnp.exp(ss - m_i[..., None])
+    # a fully-masked segment's max is -1e30 -> exp(0)=1 rows; zero them
+    # out the way the kernel's @pl.when skip leaves (m=NEG_INF, l=0)
+    empty = m_i <= -1e30
+    p = jnp.where(empty[..., None], 0.0, p)
+    m_i = jnp.where(empty, -1e30, m_i)
+    l_i = p.sum(axis=-1)                                  # (B, Hkv, G, ns)
+    vv = v.reshape(b, hkv, 1, num_splits, seg, d)
+    acc_i = (p[..., None] * vv).sum(axis=-2)              # (B,Hkv,G,ns,d)
+    # combine axes expect (..., ns, rows[, d]): move G behind ns
+    m_c = jnp.moveaxis(m_i, -1, -2)                       # (B, Hkv, ns, G)
+    l_c = jnp.moveaxis(l_i, -1, -2)
+    acc_c = jnp.moveaxis(acc_i, -2, -3)                   # (B,Hkv,ns,G,d)
+    _, l_star, acc_star = combine_split_states(m_c, l_c, acc_c)
+    out = finalize_split_states(l_star, acc_star)         # (B, Hkv, G, d)
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
 def paged_prefill_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       page_table: jax.Array, start: jax.Array,
                       kv_len: jax.Array,

@@ -102,6 +102,7 @@ class ServeConfig:
     slo_ttft_s: float = 30.0
     slo_itl_s: float = 5.0
     kv_dtype: str = "fp"
+    num_splits: int | None = None
     mesh: str | None = None
     tuning_backend: str = "jsonl"
     golden_db: str | None = None
@@ -207,6 +208,7 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                     spec_k: int | None = None,
                     prefix_cache: bool = False,
                     kv_precision: bool = False,
+                    num_splits: int | None = None,
                     mesh=None, mesh_shape=None,
                     tuning_backend: str = "jsonl",
                     golden_db: str | None = None):
@@ -236,7 +238,7 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
     workers); ``golden_db`` overlays a read-only fleet winner DB so a
     fresh deployment warm-loads committed optima it never measured.
     """
-    from ..tuning import DecodeAutoTuner
+    from ..tuning import DecodeAutoTuner, divisor_block_ks
     session = at.AutoTuner(workdir, record_backend=tuning_backend,
                            golden_db=golden_db)
 
@@ -246,20 +248,30 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
         return jax.jit(fn, **jit_kw)
 
     if cache == "paged":
-        # the paged kernel's run-time PP is the split-K tile *within* a
-        # page (page size itself is structural, fixed at pool build), so
-        # the per-bucket space is block_k in {psz/2, psz}
-        def make_decode(block_k):
+        # the paged kernel's run-time PPs are the split-K tile *within*
+        # a page (page size itself is structural, fixed at pool build)
+        # and the split-KV parallelism degree, so the per-bucket space is
+        # block_k in divisors{psz/2, psz} x num_splits; a forced
+        # --num-splits pins the candidate ladder to that single degree
+        # (1 always leads, keeping legacy winner indices valid)
+        splits = (1, 2, 4) if num_splits is None else (int(num_splits),)
+
+        def make_decode(block_k, n_split):
             decode_bk = _jit_step(model.paged_decode_step)
 
-            def variant(p, caches, table, token, pos, block_k=block_k):
-                at.publish("flash_paged_decode", block_k=block_k)
+            def variant(p, caches, table, token, pos, block_k=block_k,
+                        n_split=n_split):
+                at.publish("flash_paged_decode", block_k=block_k,
+                           num_splits=n_split)
                 return decode_bk(p, caches, table, token, pos)
             return variant
 
         tuner = DecodeAutoTuner(session, make_decode,
                                 buckets=REDUCED_BUCKETS,
-                                block_ks=(max(1, page_size // 2), page_size),
+                                block_ks=divisor_block_ks(
+                                    page_size,
+                                    (max(1, page_size // 2), page_size)),
+                                num_splits=splits,
                                 mesh_shape=mesh_shape)
         if prefill_chunk is not None:
             def make_prefill(block_q, block_k):
@@ -277,7 +289,8 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                 make_prefill, chunk_sizes=(prefill_chunk,),
                 buckets=REDUCED_BUCKETS,
                 block_qs=(max(1, prefill_chunk // 2), prefill_chunk),
-                block_ks=(max(1, page_size // 2), page_size))
+                block_ks=divisor_block_ks(
+                    page_size, (max(1, page_size // 2), page_size)))
         if spec_k is not None:
             # the accept-window k is itself tuned: a variant verifies only
             # its first k drafts (narrower chunk, fewer acceptable tokens)
@@ -331,7 +344,8 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
                 ks=tuple(sorted({1, max(1, spec_k // 2), spec_k})),
                 buckets=REDUCED_BUCKETS,
                 block_qs=(spec_k + 1,),
-                block_ks=(max(1, page_size // 2), page_size))
+                block_ks=divisor_block_ks(
+                    page_size, (max(1, page_size // 2), page_size)))
         if prefix_cache:
             # the cache's REUSE POLICY is the tuned object (minimum match
             # granularity x eviction strategy): each alternative applies
@@ -359,7 +373,8 @@ def _make_autotuner(model, workdir: str, cache: str, page_size: int,
             # 1.0, keeping the guarded pool non-empty)
             tuner.add_kv_precision(
                 _make_kv_precision_bench(model, page_size),
-                block_ks=(max(1, page_size // 2), page_size),
+                block_ks=divisor_block_ks(
+                    page_size, (max(1, page_size // 2), page_size)),
                 buckets=REDUCED_BUCKETS)
         if gateway:
             # the gateway's concurrency product (pipeline depth x
@@ -476,6 +491,12 @@ def serve_config(scfg: ServeConfig) -> dict:
     cfg = get_arch(arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
+    if scfg.num_splits is not None and cache == "paged":
+        # forced split-KV degree: published before any engine or variant
+        # jit trace so the tuned and untuned paths both read it
+        # (num_splits=1 is the explicit legacy / sequential spelling)
+        at.publish("flash_paged_decode", num_splits=int(scfg.num_splits))
+        at.publish("flash_paged_verify", num_splits=int(scfg.num_splits))
     draft_model = draft_params = None
     if draft:
         # self-speculative draft: the target's own leading layers (shared
@@ -489,6 +510,7 @@ def serve_config(scfg: ServeConfig) -> dict:
                             spec_k=spec_k if draft else None,
                             prefix_cache=prefix_cache,
                             kv_precision=kv_dtype == "auto",
+                            num_splits=scfg.num_splits,
                             mesh=mesh, mesh_shape=scfg.mesh,
                             tuning_backend=scfg.tuning_backend,
                             golden_db=scfg.golden_db) \
@@ -634,6 +656,12 @@ def main() -> None:
                          "self-speculative draft (target's leading layers)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed per speculative tick")
+    ap.add_argument("--num-splits", type=int, default=None,
+                    help="paged: split-KV parallelism degree for decode/"
+                         "verify (Flash-Decoding two-phase) — 1 forces "
+                         "the sequential kernel; default: tuned per "
+                         "length bucket over {1,2,4} with --autotune, "
+                         "else 1")
     ap.add_argument("--kv-dtype", choices=("fp", "int8", "auto"),
                     default="fp",
                     help="paged: KV page precision — fp pool dtype, int8 "

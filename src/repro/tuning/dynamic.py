@@ -11,7 +11,11 @@ The BP space is (length bucket × block_k) for the dense decode kernel
 and, when ``page_sizes`` is given, the full (length bucket × block_k ×
 page_size) product for the paged path (arXiv 2312.05779's bucket-wise
 runtime re-selection, with the page-gather granularity as the second
-axis).
+axis).  ``num_splits`` adds the split-KV *parallelism degree* as a third
+axis — per the ppOpen-AT follow-up, the number of parallel workers
+belongs in the tuned space alongside tile shape — with ``num_splits=1``
+(the sequential kernel) always present so short buckets can commit the
+no-split variant and legacy winners remain valid spellings.
 
 Chunked prefill adds a second tunable region family
 (:meth:`DecodeAutoTuner.add_prefill`): one ``dynamic select`` per
@@ -74,6 +78,25 @@ from ..serving.buckets import LENGTH_BUCKETS
 from ..serving.engine import length_bucket
 
 DEFAULT_BLOCK_KS = (256, 512, 1024)
+
+
+def divisor_block_ks(page_size: int, block_ks) -> tuple[int, ...]:
+    """Filter candidate ``block_k`` tiles to divisors of ``page_size``.
+
+    The paged kernels require the split-K tile to divide the page; a
+    non-divisor candidate silently coerces to the whole page inside the
+    kernel (now with a warning), so tuning it would measure a duplicate
+    of the ``block_k=page_size`` candidate under a misleading label.
+    Candidates are clamped to the page first (a tile larger than the
+    page is the whole-page tile), deduplicated preserving order, and the
+    whole page itself is the fallback when nothing survives.
+    """
+    out: list[int] = []
+    for bk in block_ks:
+        bk = min(int(bk), page_size)
+        if bk > 0 and page_size % bk == 0 and bk not in out:
+            out.append(bk)
+    return tuple(out) or (page_size,)
 
 
 # -- region naming ----------------------------------------------------------
@@ -218,6 +241,14 @@ class DecodeAutoTuner:
     ``make_decode(block_k)`` — or ``make_decode(block_k, page_size)`` when
     ``page_sizes`` is given — builds one decode callable per variant; the
     region measures each candidate once and commits the fastest.
+
+    ``num_splits`` grows the space with the split-KV parallelism degree
+    (``make_decode`` then takes it as its last positional): the variant
+    list is ordered with the full legacy (``num_splits=1``) block first,
+    so winner *indices* recorded by a pre-split-KV tuning DB still name
+    the same variants — those records stay valid spellings (the
+    record-store ``OAT_NUMALT`` stamp decides whether they warm-load or
+    the grown region re-measures).
     """
 
     def __init__(self, session: "at.AutoTuner | ATContext",
@@ -225,6 +256,7 @@ class DecodeAutoTuner:
                  buckets=LENGTH_BUCKETS,
                  block_ks=DEFAULT_BLOCK_KS,
                  page_sizes=None,
+                 num_splits=None,
                  mesh_shape=None):
         self.session = at.AutoTuner.for_context(session)
         self.ctx = self.session.ctx
@@ -236,6 +268,13 @@ class DecodeAutoTuner:
             else ("block_k", "page_size")
         self.variants = [(bk,) for bk in block_ks] if page_sizes is None \
             else [(bk, ps) for bk in block_ks for ps in page_sizes]
+        if num_splits is not None:
+            # 1 (the sequential kernel) always leads, and the ns=1 block
+            # keeps the legacy variant order as its prefix
+            splits = tuple(dict.fromkeys([1, *(int(n) for n in num_splits)]))
+            self.param_names = (*self.param_names, "num_splits")
+            self.variants = [(*var, ns) for ns in splits
+                             for var in self.variants]
         self.regions = {}
         for b in buckets:
             name = self._key("decode", b)
